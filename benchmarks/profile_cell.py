@@ -1,0 +1,73 @@
+"""Hillclimb profiler: lower one cell, print roofline terms, collective-kind
+breakdown and the top HLO buffers with source op names.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch jamba-v0.1-52b \
+      --shape train_4k [--multi-pod]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell, plan_cell
+
+BYTES = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1, "f16": 2}
+
+
+def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 8,
+            overrides=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_cell(arch, shape, mesh, multi_pod=multi_pod,
+                     cfg_overrides=overrides)
+    with jax.set_mesh(mesh):
+        compiled = lower_cell(plan).compile()
+        mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    trips = plan.cfg.repeats
+    f, b = ha.hlo_cost(text, default_trip=trips)
+    coll = ha.collective_bytes(text, default_trip=trips)
+    mf = ha.model_flops_estimate(plan.cfg, plan.shape)
+    saved = ha.attention_score_hbm_bytes(plan.cfg, plan.shape, mesh.size)
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    comp_ms, mem_ms = f / ha.PEAK_FLOPS * 1e3, b / ha.HBM_BW * 1e3
+    coll_ms = coll.per_device_bytes / ha.LINK_BW * 1e3
+    frac = comp_ms / max(comp_ms, mem_ms, coll_ms)
+    print(f"== {arch} x {shape} x {'2x16x16' if multi_pod else '16x16'} ==")
+    memk_ms = max(b - saved, b * 0.05) / ha.HBM_BW * 1e3
+    frack = comp_ms / max(comp_ms, memk_ms, coll_ms)
+    print(f"peak {peak/2**30:.2f} GiB/dev | compute {comp_ms:.1f} ms | "
+          f"memory {mem_ms:.1f} ms (kernel-adj {memk_ms:.1f}) | "
+          f"collective {coll_ms:.1f} ms | useful {mf/(f*mesh.size):.2f} | "
+          f"frac {frac:.3f} (kernel-adj {frack:.3f})")
+    print("collectives:", {k: f"{v/2**30:.2f}GiB"
+                           for k, v in sorted(coll.by_kind.items())})
+
+    sizes = OrderedDict()
+    for dt, dims in re.findall(r"(f32|bf16|s32|u32|pred)\[([0-9,]+)\]", text):
+        n = int(np.prod([int(d) for d in dims.split(",")])) * BYTES[dt]
+        sizes.setdefault(f"{dt}[{dims}]", n)
+    print("top buffers:")
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:top]:
+        mm = re.search(r"= \(?" + re.escape(k) + r"[^\n]*?op_name=\"([^\"]+)\"",
+                       text)
+        src = mm.group(1)[:80] if mm else ""
+        print(f"  {v/2**30:7.2f} GiB {k:36s} {src}")
+    return dict(peak=peak, compute_ms=comp_ms, memory_ms=mem_ms,
+                collective_ms=coll_ms, frac=frac)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.multi_pod)

@@ -1,0 +1,85 @@
+"""Reproduce the paper's §4 experiments at reduced repetition count.
+
+Fig 10: overhead ratio 4-5.5x; fitted constant ~3.8.
+Fig 11: acceptable-latency law  W/p ~= 470*lambda.
+Fig 12/14: MWT vs SWT: startup-phase speedup, flat overall gain.
+
+Full-scale parameters (1000 reps, W to 1e8) run the same code; see
+benchmarks/ for the CSV versions used in EXPERIMENTS.md.
+
+  PYTHONPATH=src python examples/paper_sweep.py
+"""
+import numpy as np
+
+from repro.core import analysis, one_cluster
+from repro.core import divisible as dv
+
+
+def overhead_and_fit(reps=24):
+    print("=== Fig 10: overhead ratio + fitted constant ===")
+    ratios_all, fits_all = [], []
+    for p in (32, 64):
+        topo = one_cluster(p, 1)
+        for W in (10**5, 10**6, 10**7):
+            for lam in (2, 62, 262):
+                cfg = dv.EngineConfig(topology=topo,
+                                      max_events=dv.default_max_events(W, p, lam))
+                scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 1,
+                                         lam=lam)
+                res = dv.simulate_batch(cfg, scn)
+                ms = np.asarray(res.makespan)
+                r = analysis.overhead_ratio(ms, W, p, lam)
+                c = analysis.fitted_constant(ms, W, p, lam)
+                ratios_all.append(np.median(r))
+                fits_all.append(np.median(c))
+                print(f"  p={p:3d} W=1e{int(np.log10(W))} lam={lam:3d}: "
+                      f"ratio={np.median(r):5.2f} fit_c={np.median(c):5.2f}")
+    print(f"  => median overhead ratio {np.median(ratios_all):.2f} "
+          f"(paper: 4-5.5); fitted constant {np.median(fits_all):.2f} "
+          f"(paper: 3.8)")
+
+
+def acceptable_latency(reps=16):
+    print("\n=== Fig 11: acceptable latency (overhead <= 10%) ===")
+    p = 32
+    topo = one_cluster(p, 1)
+    for W in (10**5, 10**6, 10**7):
+        lam_th = analysis.theoretical_limit_latency(W, p)
+        by_lam = {}
+        for lam in np.unique(np.linspace(max(lam_th * 0.4, 1), lam_th * 2.2,
+                                         8).astype(int)):
+            cfg = dv.EngineConfig(topology=topo,
+                                  max_events=dv.default_max_events(W, p, int(lam)))
+            scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 3,
+                                     lam=int(lam))
+            by_lam[int(lam)] = np.asarray(dv.simulate_batch(cfg, scn).makespan)
+        lam_exp = analysis.experimental_limit_latency(by_lam, W, p)
+        print(f"  W=1e{int(np.log10(W))}: theoretical lam*={lam_th:7.1f} "
+              f"experimental lam*={lam_exp:7.1f} "
+              f"(W/p)/lam*={(W / p) / max(lam_exp, 1):6.0f} (paper: ~470)")
+
+
+def mwt_vs_swt(reps=24):
+    print("\n=== Fig 12/14: MWT vs SWT ===")
+    W, lam = 10**6, 262
+    for p in (16, 32, 64):
+        topo = one_cluster(p, lam)
+        out = {}
+        for mwt in (False, True):
+            cfg = dv.EngineConfig(topology=topo, mwt=mwt,
+                                  max_events=dv.default_max_events(W, p, lam))
+            scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 5,
+                                     lam=lam)
+            res = dv.simulate_batch(cfg, scn)
+            out[mwt] = (np.asarray(res.makespan), np.asarray(res.startup_end))
+        ms_gain = np.median(out[False][0]) / np.median(out[True][0])
+        su_gain = np.median(out[False][1]) / np.median(out[True][1])
+        print(f"  p={p:3d}: startup speedup x{su_gain:4.2f} "
+              f"overall speedup x{ms_gain:4.2f} "
+              f"(paper: startup up to 2x+, overall ~flat)")
+
+
+if __name__ == "__main__":
+    overhead_and_fit()
+    acceptable_latency()
+    mwt_vs_swt()

@@ -1,0 +1,84 @@
+"""Quickstart: simulate Work Stealing like the paper does.
+
+Runs one scenario with full logging (Gantt + JSON + Paje export), then a
+small parameter sweep with median/IQR stats — the two modes of the paper's
+simulator engine — and a DAG application (merge sort, Fig 9's example).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (EngineConfig, analysis, make_scenario, one_cluster,
+                        simulate, two_clusters)
+from repro.core import divisible as dv
+from repro.core import dag as dg
+from repro.core import dag_gen as gen
+from repro.core.gantt import ascii_gantt, decode_trace, to_json, to_paje
+from repro.core.sweep import run_grid
+
+
+def single_run():
+    print("=== one scenario: W=5000 unit tasks, p=8, lambda=10 ===")
+    topo = one_cluster(8, 10)
+    cfg = EngineConfig(topology=topo, log_trace=True, max_trace=8192,
+                       max_events=1 << 18)
+    res = simulate(cfg, make_scenario(5000, seed=42, lam=10))
+    print(f"makespan={int(res.makespan)}  (W/p lower bound = {5000 // 8})")
+    print(f"steal requests={int(res.n_requests)} "
+          f"ok={int(res.n_success)} fail={int(res.n_fail)}")
+    dec = decode_trace(np.asarray(res.trace), int(res.n_trace), 8, 5000,
+                       int(res.makespan))
+    print(ascii_gantt(dec["runs"], int(res.makespan), width=64))
+    paje = to_paje(dec["runs"], int(res.makespan))
+    print(f"paje trace: {len(paje.splitlines())} lines "
+          f"(write to .trace for ViTE/Paje)")
+    print(to_json(res, 8, 5000)[:160], "...")
+
+
+def sweep():
+    print("\n=== sweep: overhead ratio vs the theoretical bound ===")
+    topo = one_cluster(32, 1)
+    grid = run_grid(topo, W_list=[100_000, 1_000_000], lam_list=[2, 50, 200],
+                    reps=16)
+    for W in (100_000, 1_000_000):
+        for lam in (2, 50, 200):
+            sel = (grid.W == W) & (grid.lam == lam)
+            ratios = analysis.overhead_ratio(grid.makespan[sel], W, 32, lam)
+            s = analysis.summarize(ratios)
+            print(f"W=1e{int(np.log10(W))} lam={lam:4d}: overhead ratio "
+                  f"median={s['median']:.2f} IQR=[{s['q1']:.2f},{s['q3']:.2f}]"
+                  f"  (paper: 4-5.5)")
+
+
+def two_cluster_strategies():
+    print("\n=== two clusters: victim-selection strategies ===")
+    from repro.core import LOCAL_FIRST, UNIFORM, strategy_name
+    for strat, rp in ((UNIFORM, 0.25), (LOCAL_FIRST, 0.1), (LOCAL_FIRST, 0.5)):
+        topo = two_clusters(16, 100).with_strategy(strat, remote_prob=rp)
+        cfg = EngineConfig(topology=topo, max_events=1 << 20)
+        scn = dv.batch_scenarios(200_000,
+                                 np.arange(8, dtype=np.uint32) + 1,
+                                 lam_local=1, lam_remote=100, remote_prob=rp)
+        res = dv.simulate_batch(cfg, scn)
+        med = int(np.median(np.asarray(res.makespan)))
+        print(f"  {strategy_name(strat):12s} remote_prob={rp:.2f}: "
+              f"median makespan {med}")
+
+
+def dag_application():
+    print("\n=== DAG application: merge sort on 6 processors ===")
+    dagf = gen.merge_sort(4000, cutoff=64)
+    topo = one_cluster(6, 5)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, max_events=1 << 18)
+    res = dg.simulate_dag(cfg, dv.make_scenario(0, 3, lam=5))
+    t1, d = dagf.total_work, dagf.critical_path()
+    print(f"tasks={dagf.n} T1={t1} critical_path={d} "
+          f"makespan={int(res.makespan)} "
+          f"(bounds: max(T1/p, D)={max(t1 // 6, d)})")
+
+
+if __name__ == "__main__":
+    single_run()
+    sweep()
+    two_cluster_strategies()
+    dag_application()

@@ -1,0 +1,15 @@
+"""Serving example: WS-scheduled batched requests through prefill+decode.
+
+The stealing policy is chosen by simulating the fleet topology with the
+paper's simulator (see the planner line in the output).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "mixtral-8x7b", "--requests", "24",
+                "--prompt-len", "16", "--max-new", "8", "--pods", "2"]
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end training example: a ~1M-param qwen3-family model for a few
+hundred steps with checkpoint/restart and an injected failure.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-1.7b", "--reduced",
+                "--steps", "200", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_example_train",
+                "--fail-at", "57", "--lr", "3e-3"]
+    main()

@@ -1,0 +1,17 @@
+"""Core: the paper's Work-Stealing simulator as composable JAX modules.
+
+Engines (paper §3): event+processor engine (``divisible``, ``dag``,
+``adaptive``), task engine (task models inside each engine + ``dag_gen``),
+topology engine (``topology``), log engine (``gantt``), simulator engine
+(``sweep``), analysis layer (``analysis``).
+"""
+from repro.core.topology import (  # noqa: F401
+    Topology, one_cluster, two_clusters, multi_cluster, tpu_fleet,
+    UNIFORM, LOCAL_FIRST, INV_DISTANCE, ROUND_ROBIN, strategy_name,
+)
+from repro.core.divisible import (  # noqa: F401
+    EngineConfig, Scenario, SimResult, make_scenario, simulate, simulate_batch,
+    default_max_events,
+)
+from repro.core.sweep import run_grid, quick_sim, GridResult, simulate_sharded  # noqa: F401
+from repro.core import analysis  # noqa: F401

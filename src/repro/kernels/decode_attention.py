@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode: single-query attention over a long KV cache.
+
+Grid ``(B, H, num_kv_blocks)`` — the kv dim is minor-most so the partial
+online-softmax state accumulates in VMEM scratch across kv blocks (split-K
+style); the final block normalizes and writes out. Memory-bound by design:
+the whole KV stream is read once at (ideally) HBM bandwidth, which is the
+roofline for decode — this kernel is the hot spot of decode_32k/long_500k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, window: int, block_kv: int):
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    kpos = kj * block_kv + lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
+    keep = kpos < kv_len
+    if window > 0:
+        keep &= kpos >= kv_len - window
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                 scale: Optional[float] = None, block_kv: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q (B, 1, H, hd); caches (B, Smax, KV, hd); kv_len scalar int32.
+
+    Returns (B, 1, H, hd).
+    """
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    block_kv = min(block_kv, Smax)
+    pk = (-Smax) % block_kv
+    qt = q.transpose(0, 2, 1, 3)                          # (B,H,1,hd)
+    kt = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    nk = kt.shape[2] // block_kv
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               block_kv=block_kv)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Grid ``(B, H, num_q_blocks, num_kv_blocks)``; TPU executes the minor-most
+grid dim sequentially per core, so the online-softmax state (m, l, acc)
+lives in VMEM scratch across the kv iterations of one q block. BlockSpecs
+tile q/out to ``(block_q, head_dim)`` and k/v to ``(block_kv, head_dim)``,
+with the GQA group mapping folded into the k/v index maps (kv head =
+h // (H // KV)). MXU dims stay multiples of 128 for the defaults.
+
+Validated against ``repro.kernels.ref.flash_attention_ref`` in interpret
+mode (this container is CPU-only; TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_kv: int, seq_kv: int, q_offset: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = q_offset + qi * block_q + lax.broadcasted_iota(jnp.int32,
+                                                          (block_q, block_kv), 0)
+    kpos = kj * block_kv + lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 1)
+    keep = kpos < seq_kv
+    if causal:
+        keep &= kpos <= qpos
+    if window > 0:
+        keep &= kpos > qpos - window
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B, Sq, H, hd); k/v (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_kv
+    qt = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    nq = qt.shape[2] // block_q
+    nk = kt.shape[2] // block_kv
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, seq_kv=Skv, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, qt.shape[2], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    if pq:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile via Mosaic; on CPU (this container) they run in
+interpret mode for validation, and the library falls back to the XLA
+implementations (``repro.models.attention``) for real workloads — the
+algorithms are identical, so the dry-run HLO reflects the same compute/
+memory structure the kernels implement on-chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import divisible as dv
+from repro.kernels import decode_attention as _fd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ws_sim as _ws
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_kv=128, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, *, window=0, block_kv=512,
+                 interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _fd.flash_decode(q, k_cache, v_cache, kv_len, window=window,
+                            block_kv=block_kv, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rms_norm(x, scale, *, eps=1e-6, block_rows=128, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _rn.rms_norm(x, scale, eps=eps, block_rows=block_rows,
+                        interpret=interp)
+
+
+def ws_sim(cfg: dv.EngineConfig, scn: dv.Scenario, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _ws.ws_sim_pallas(cfg, scn, interpret=interp)

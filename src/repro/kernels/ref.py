@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each kernel in this package is validated (interpret mode, shape/dtype sweeps)
+against the function of the same name here. These delegate to the library
+implementations that are themselves oracle-tested:
+
+* ``flash_attention_ref``  -> full-materialization attention
+* ``decode_attention_ref`` -> dense single-query attention
+* ``rms_norm_ref``         -> f32 rms norm
+* ``ws_sim_ref``           -> the event-engine (bit-exact vs the serial
+                              numpy oracle in repro.core.oracle)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import divisible as _dv
+from repro.models.attention import decode_attention as _dec
+from repro.models.attention import ref_attention as _ref_attn
+from repro.models.layers import rms_norm as _rms
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    return _ref_attn(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, window=0, scale=None):
+    return _dec(q, k_cache, v_cache, kv_len, window=window, scale=scale)
+
+
+def rms_norm_ref(x, scale, eps=1e-6):
+    return _rms(x, scale, eps)
+
+
+def ws_sim_ref(cfg: _dv.EngineConfig, scn: _dv.Scenario) -> _dv.SimResult:
+    return _dv.simulate_batch(cfg, scn)

@@ -1,0 +1,49 @@
+"""Pallas TPU fused RMSNorm: one pass over rows, f32 statistics in VMEM.
+
+Grid over row blocks; each block loads ``(block_rows, D)`` into VMEM,
+computes mean-square in f32 and writes the scaled result — fusing what XLA
+would otherwise split into a reduce + broadcast-multiply pair over HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                   # (br, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6, block_rows: int = 128,
+             interpret: bool = False):
+    """x (..., D); scale (D,)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xr = x.reshape(-1, D)
+    R = xr.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    n = xr.shape[0] // block_rows
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    if pad:
+        out = out[:R]
+    return out.reshape(orig_shape)

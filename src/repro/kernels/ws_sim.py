@@ -1,0 +1,97 @@
+"""Pallas kernel: batched Work-Stealing simulations, one scenario per grid
+cell — the paper-representative hot spot (DESIGN.md §2).
+
+The divisible-load event machine keeps O(p) int32 state (event times,
+processor states, PRNG lanes). Running a Monte-Carlo sweep as ordinary JAX
+re-reads that state from HBM on every event; here the *entire* per-scenario
+state lives in VMEM/registers for the whole event loop (~p·6·4 bytes ≈ a few
+KiB per scenario), so HBM is touched exactly twice: scenario parameters in,
+results out. The event loop body is the same traced code as the library
+engine (``repro.core.divisible._simulate``), so the kernel is bit-identical
+to the oracle-validated engine by construction.
+
+Grid: ``(G,)`` scenarios; BlockSpecs give each cell one scenario row of each
+parameter vector and one row of each result vector. Validated in interpret
+mode on CPU; on a real TPU the same call compiles via Mosaic (the body is
+argmin/compare/select vector ops over int32 lanes — all VPU-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import divisible as dv
+
+
+def _kernel(cid_ref, hops_ref, W_ref, seed_ref, ll_ref, lr_ref, ts_ref,
+            tc_ref, rp_ref,
+            makespan_ref, nev_ref, nreq_ref, nsucc_ref, nfail_ref,
+            idle_ref, startup_ref, executed_ref, overflow_ref, *,
+            cfg: dv.EngineConfig):
+    scn = dv.Scenario(
+        W=W_ref[0], seed=seed_ref[0], lam_local=ll_ref[0], lam_remote=lr_ref[0],
+        theta_static=ts_ref[0], theta_comm=tc_ref[0], remote_prob=rp_ref[0])
+    res = dv._simulate_impl(cfg, cid_ref[...], hops_ref[...], scn)
+    makespan_ref[0] = res.makespan
+    nev_ref[0] = res.n_events
+    nreq_ref[0] = res.n_requests
+    nsucc_ref[0] = res.n_success
+    nfail_ref[0] = res.n_fail
+    idle_ref[0] = res.total_idle
+    startup_ref[0] = res.startup_end
+    executed_ref[0, :] = res.executed
+    overflow_ref[0] = res.overflow.astype(jnp.int32)
+
+
+def ws_sim_pallas(cfg: dv.EngineConfig, scn: dv.Scenario,
+                  interpret: bool = True):
+    """Batched simulation; ``scn`` leaves have leading batch dim G.
+
+    Returns the same fields as ``dv.SimResult`` (trace logging unsupported
+    in-kernel; ``cfg.log_trace`` must be False).
+    """
+    assert not cfg.log_trace, "trace logging not supported in the kernel"
+    G = int(scn.W.shape[0])
+    p = cfg.p
+
+    scalar_spec = pl.BlockSpec((1,), lambda i: (i,))
+    out_shapes = [
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # makespan
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_events
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_requests
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_success
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_fail
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # total_idle
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # startup_end
+        jax.ShapeDtypeStruct((G, p), jnp.int32),  # executed
+        jax.ShapeDtypeStruct((G,), jnp.int32),   # overflow
+    ]
+    out_specs = [scalar_spec] * 7 + [pl.BlockSpec((1, p), lambda i: (i, 0)),
+                                     scalar_spec]
+
+    cid = jnp.asarray(cfg.topology.cluster_id)
+    hops = jnp.asarray(cfg.topology.hops)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg),
+        grid=(G,),
+        in_specs=[pl.BlockSpec((p,), lambda i: (0,)),
+                  pl.BlockSpec((p, p), lambda i: (0, 0))] + [scalar_spec] * 7,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cid, hops, scn.W, scn.seed, scn.lam_local, scn.lam_remote,
+      scn.theta_static, scn.theta_comm, scn.remote_prob)
+
+    (makespan, n_events, n_requests, n_success, n_fail, total_idle,
+     startup_end, executed, overflow) = outs
+    return dv.SimResult(
+        makespan=makespan, n_events=n_events, n_requests=n_requests,
+        n_success=n_success, n_fail=n_fail, total_idle=total_idle,
+        startup_end=startup_end, executed=executed,
+        overflow=overflow.astype(jnp.bool_),
+        trace=jnp.zeros((G, 1, 4), jnp.int32),
+        n_trace=jnp.zeros((G,), jnp.int32),
+    )

@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this prints/records ``compiled.memory_analysis()`` (proves the
+program fits per-device HBM) and ``compiled.cost_analysis()`` + parsed
+collective bytes (feeds EXPERIMENTS.md §Roofline). Results are cached as
+JSON under ``artifacts/dryrun/`` so interrupted sweeps resume.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all                 # single-pod 16x16
+  python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES, cell_is_runnable, get_config, list_archs
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell, plan_cell
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, overrides: dict = None) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    out = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if out.exists() and not force:
+        doc = json.loads(out.read_text())
+        tag = ("skipped: " + doc.get("reason", "")) if doc.get("skipped") \
+            else f"dominant={doc['roofline']['dominant']}"
+        print(f"[cached] {arch} × {shape_name} × {mesh_tag}: {tag}")
+        return doc
+
+    cfg = get_config(arch)
+    ok, reason = cell_is_runnable(cfg, SHAPES[shape_name])
+    if not ok:
+        doc = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "skipped": True, "reason": reason}
+        out.write_text(json.dumps(doc, indent=1))
+        print(f"[skip]   {arch} × {shape_name}: {reason}")
+        return doc
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_cell(arch, shape_name, mesh, multi_pod=multi_pod,
+                     cfg_overrides=overrides)
+    # jax.set_mesh: the context-parallel decode path uses jax.shard_map with
+    # the ambient mesh; `with mesh:` alone doesn't install the sharding
+    # context that shard_map resolves against.
+    with jax.set_mesh(mesh):
+        lowered = lower_cell(plan)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_doc = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes_estimate": (
+                (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "output_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                - (getattr(mem, "alias_size_in_bytes", 0) or 0)),
+        }
+        mf = ha.model_flops_estimate(plan.cfg, plan.shape)
+        roof = ha.roofline_from(compiled, mesh.size,
+                                default_trip=plan.cfg.repeats,
+                                model_flops=mf, cfg=plan.cfg,
+                                shape=plan.shape)
+        print(compiled.memory_analysis())
+
+    doc = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "skipped": False,
+        "n_devices": mesh.size,
+        "context_parallel": plan.context_parallel,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_doc,
+        "roofline": roof.as_dict(),
+    }
+    out.write_text(json.dumps(doc, indent=1))
+    gb = (mem_doc["peak_bytes_estimate"] or 0) / 2**30
+    print(f"[ok]     {arch} × {shape_name} × {mesh_tag}: "
+          f"{gb:.2f} GiB/dev peak, dominant={roof.dominant}, "
+          f"compute={roof.compute_s*1e3:.2f}ms memory={roof.memory_s*1e3:.2f}ms "
+          f"collective={roof.collective_s*1e3:.2f}ms "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs())
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch × shape) on the chosen mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(ART))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mp in meshes:
+        for arch, shape in cells:
+            try:
+                run_cell(arch, shape, mp, out_dir, force=args.force)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[FAIL]   {arch} × {shape} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces 512
+host devices via XLA_FLAGS before any jax initialization, while ordinary
+tests/benches must see the single real device.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips/pod; multi-pod adds a leading pod axis (2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (1, 1),
+                   axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Tiny mesh over however many devices exist (CPU tests)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch (data parallel): ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, *names: str) -> int:
+    return int(np.prod([mesh.shape[n] for n in names if n in mesh.axis_names]))

@@ -1,0 +1,196 @@
+"""Sharding policy: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (DESIGN.md §5): TP on ``model`` (heads / d_ff / vocab), FSDP on
+``data`` (the other matrix axis; optimizer state fully sharded), DP batch on
+``('pod','data')``, EP on ``data`` when the expert count divides it,
+context-parallel KV on ``('pod','data')`` for the long-decode shape.
+
+Rules are *path-based* (regex on the flattened param path) with a
+divisibility guard: any dim that doesn't divide its mesh axis extent is
+replicated instead (e.g. GQA KV heads 8 on a 16-way model axis — XLA would
+pad; we choose replication for predictable comms).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import dp_axes, axis_size
+
+# (path-regex, spec-per-dim) — first match wins. Specs name mesh axes; the
+# divisibility guard downgrades un-divisible entries to None (replicated).
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"tok_embed$",                ("model", "data")),
+    (r"pos_embed$",                (None, "data")),
+    (r"lm_head$",                  ("data", "model")),
+    (r"(final_norm|norm|norm1|norm2|xnorm|out_norm)$", (None,)),
+    (r"(q_norm|k_norm)$",          (None,)),
+    # attention (leading repeats axis when inside scanned layers)
+    (r"attn/w[qkv]$",              ("data", "model")),
+    (r"attn/wo$",                  ("model", "data")),
+    # dense mlp
+    (r"ffn/w_(gate|up)$",          ("data", "model")),
+    (r"ffn/w_down$",               ("model", "data")),
+    # moe: experts on data when divisible (EP), else fall back inside guard
+    (r"ffn/router$",               ("data", None)),
+    (r"ffn/(w_gate|w_up)$",        ("data", None, "model")),   # (E, D, F) handled below
+    (r"ffn/w_down$",               ("data", "model", None)),
+    # mamba
+    (r"mamba/in_proj$",            ("data", "model")),
+    (r"mamba/conv_w$",             (None, "model")),
+    (r"mamba/bc_proj$",            ("model", None)),
+    (r"mamba/dt_proj$",            ("model", None)),
+    (r"mamba/(dt_bias|A_log|D)$",  (None,)),
+    (r"mamba/out_proj$",           ("model", "data")),
+    # xlstm
+    (r"mlstm/up_proj$",            ("data", "model")),
+    (r"mlstm/w[qkv]$",             ("data", "model")),
+    (r"mlstm/w_if$",               ("data", None)),
+    (r"mlstm/down_proj$",          ("model", "data")),
+    (r"slstm/w_in$",               ("data", "model")),
+    (r"slstm/r_rec$",              (None, None, None)),
+    (r"slstm/out_proj$",           ("data", "model")),
+    # encoder nested copies resolve through the same rules above
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate any dim whose extent doesn't divide the mesh axis size."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        else:
+            size = axis_size(mesh, *((ax,) if isinstance(ax, str) else ax))
+            out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    ps = _path_str(path)
+    shape = leaf.shape
+    for pat, spec in _RULES:
+        if re.search(pat, ps):
+            # scanned layer stacks have a leading repeats axis -> prepend None
+            if len(shape) == len(spec) + 1:
+                return _guard((None,) + tuple(spec), shape, mesh)
+            if len(shape) == len(spec):
+                return _guard(spec, shape, mesh)
+            # rank mismatch (e.g. dense-vs-moe ffn rules): try the next rule
+            continue
+    return P()  # default: replicate
+
+
+def shard_params(abstract_params, mesh: Mesh):
+    """Pytree of NamedSharding for a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        abstract_params)
+
+
+def shard_opt_state(abstract_opt, params_shardings, mesh: Mesh):
+    """m/v mirror the param shardings; step is replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=params_shardings,
+        v=jax.tree.map(lambda s: s, params_shardings),
+    )
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                seq_shard: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs (with shardings) for the input batch of a cell."""
+    dp = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    dpsz = axis_size(mesh, *dp)
+    bspec = dp if B % dpsz == 0 and B >= dpsz else None
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        S_text = S - (cfg.vision_prefix_len if cfg.vision_prefix_len else 0)
+        out["tokens"] = sds((B, S_text), np.int32, P(bspec, None))
+        if shape.kind == "train":
+            out["labels"] = sds((B, S_text), np.int32, P(bspec, None))
+        if cfg.vision_prefix_len:
+            out["vis_embeds"] = sds((B, cfg.vision_prefix_len, cfg.d_model),
+                                    np.dtype(cfg.param_dtype), P(bspec, None, None))
+        if cfg.is_encoder_decoder:
+            out["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                np.dtype(cfg.param_dtype), P(bspec, None, None))
+    else:  # decode
+        out["tokens"] = sds((B, 1), np.int32, P(bspec, None))
+    return out
+
+
+def cache_specs(model, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Tuple[Any, Tuple[Tuple[str, ...], Tuple[str, ...]]]:
+    """(cache ShapeDtypeStruct pytree with shardings, (cp_seq_axes,
+    cp_batch_axes)).
+
+    Decode KV caches always context-parallelize the sequence dim: over
+    'model' when the batch covers the dp axes (decode_32k — the cache of the
+    large archs exceeds batch-sharded HBM), and over dp+('model',) when it
+    can't (long_500k: B=1). The attention runs through the shard_map
+    partial-softmax path with these axes.
+    """
+    dp = dp_axes(mesh)
+    dpsz = axis_size(mesh, *dp)
+    msz = mesh.shape.get("model", 1)
+    B, S = shape.global_batch, shape.seq_len
+    batch_ok = B % dpsz == 0 and B >= dpsz
+    if batch_ok:
+        seq_axes = ("model",) if S % msz == 0 else ()
+        batch_axes = dp
+    else:
+        seq_axes = tuple(dp) + (("model",) if S % (dpsz * msz) == 0 else ())
+        batch_axes = ()
+    abstract = model.abstract_cache(B, S, jax.numpy.bfloat16)
+
+    bspec = batch_axes if batch_axes else None
+    sspec = seq_axes if len(seq_axes) > 1 else (seq_axes[0] if seq_axes else None)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shp = leaf.shape
+        if re.search(r"/(k|v)$", ps):                # (R, B, S, KV, hd)
+            return NamedSharding(mesh, P(None, bspec, sspec, None, None))
+        if re.search(r"/(xk|xv)$", ps):              # (R, B, Senc, KV, hd)
+            return NamedSharding(mesh, P(None, bspec, None, None, None))
+        # ssm/xlstm states: (R, B, ...) — shard batch when possible
+        if batch_ok and len(shp) >= 2 and shp[1] % dpsz == 0:
+            return NamedSharding(mesh, P(*((None, bspec) + (None,) * (len(shp) - 2))))
+        return NamedSharding(mesh, P())
+
+    shardings = jax.tree_util.tree_map_with_path(spec_for, abstract)
+    specs = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        abstract, shardings)
+    return specs, (seq_axes, batch_axes)
+
+
+def abstract_with_shardings(abstract_tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        abstract_tree, shardings)

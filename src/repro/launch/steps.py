@@ -1,0 +1,222 @@
+"""Step builders: train / prefill / decode, with shardings for a given
+(arch × shape × mesh) cell. Shared by the dry-run, the trainers and the
+serving driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def make_act_constrainer(mesh: Mesh, dp, sequence_parallel: bool = True):
+    """Activation layout policy (DESIGN.md §5): batch on dp axes; between
+    layers the sequence dim is additionally sharded on 'model'
+    (Megatron-style sequence parallelism) — it divides the remat-carry
+    footprint by |model| and lets XLA place the gather/reduce-scatter pair
+    around each layer's TP region. Tensors whose dims don't divide are left
+    to propagation on that dim.
+
+    ``constrain(h, full_seq=True)`` pins the *sequence-gathered* layout:
+    recurrent mixers (mamba/xlstm chunk scans) need contiguous S, and
+    without the explicit bf16 gather here XLA gathers their *stacked f32
+    chunk inputs* instead (measured 4x the traffic on jamba — §Perf).
+    """
+    msz = mesh.shape.get("model", 1)
+
+    def constrain(h, full_seq: bool = False):
+        if h.ndim < 2:
+            return h
+        spec = [None] * h.ndim
+        if dp is not None and h.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+            spec[0] = dp
+        if (not full_seq and sequence_parallel and h.ndim == 3
+                and h.shape[1] > 1 and h.shape[1] % msz == 0):
+            spec[1] = "model"
+        return jax.lax.with_sharding_constraint(h, P(*spec))
+
+    return constrain
+
+
+def build_train_step(model, opt_cfg: adamw.AdamWConfig, act_spec=None,
+                     microbatches: int = 1):
+    """Train step; ``microbatches > 1`` = gradient accumulation (scan over
+    microbatch slices, f32 grad accumulator sharded like the params) — the
+    standard activation-memory lever for the biggest train cells."""
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch,
+                                             act_spec=act_spec)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb_i):
+                gacc, lacc = carry
+                (l, _m), g = grad_fn(params, mb_i, act_spec=act_spec)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = lax.scan(acc_step, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"loss": loss, "xent": loss,
+                       "moe_aux": jnp.float32(0.0)}
+        new_params, new_opt, om = adamw.apply(opt_cfg, params, opt_state, grads)
+        return new_params, new_opt, {**metrics, **om}
+    return train_step
+
+
+def build_prefill_step(model, act_spec=None):
+    def prefill_step(params, batch):
+        logits, _aux = model.forward(params, batch, act_spec=act_spec)
+        return logits[:, -1:]          # serving returns next-token logits
+    return prefill_step
+
+
+def build_decode_step(model, cp_axes: Optional[Tuple[str, ...]],
+                      act_spec=None):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, cp_axes=cp_axes,
+                                 act_spec=act_spec)
+    return decode_step
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    arch: str
+    shape: ShapeSpec
+    cfg: ArchConfig
+    mesh: Mesh
+    fn: Any
+    args: Tuple
+    donate: Tuple[int, ...]
+    context_parallel: bool
+    out_shardings: Any = None
+
+
+def plan_cell(arch: str, shape_name: str, mesh: Optional[Mesh] = None, *,
+              multi_pod: bool = False,
+              opt_cfg: Optional[adamw.AdamWConfig] = None,
+              cfg_overrides: Optional[dict] = None) -> CellPlan:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    _dp = dp_axes(mesh)
+    _dpsz = int(np.prod([mesh.shape[a] for a in _dp]))
+    if (cfg.n_experts and shape.kind != "decode"
+            and not (cfg_overrides and "moe_groups" in cfg_overrides)):
+        tokens = shape.global_batch * shape.seq_len
+        _all = _dpsz * mesh.shape.get("model", 1)
+        # groups over data x model: per-group capacity (and so every dispatch
+        # buffer) shrinks by |model| vs data-only groups (§Perf iteration)
+        if tokens % _all == 0:
+            cfg = dataclasses.replace(cfg, moe_groups=_all)
+        elif tokens % _dpsz == 0:
+            cfg = dataclasses.replace(cfg, moe_groups=_dpsz)
+    model = build_model(cfg)
+
+    ab_params = model.abstract_params()
+    pshard = shd.shard_params(ab_params, mesh)
+    params_specs = shd.abstract_with_shardings(ab_params, pshard)
+
+    dp = dp_axes(mesh)
+    dpsz = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_shardable = (shape.global_batch % dpsz == 0
+                       and shape.global_batch >= dpsz)
+    # Sequence parallelism pays off for attention-only stacks (many scanned
+    # layers -> big remat-carry savings, attention gathers S anyway). For
+    # recurrent mixers (mamba/xlstm) it backfires: the chunk scans consume
+    # contiguous S, so SP forces XLA to gather their stacked (f32) scan
+    # inputs every layer — measured 4x gather traffic on jamba (§Perf).
+    attn_only = all(m in ("attn", "xattn") for m, _ in cfg.pattern)
+    force_sp = os.environ.get("REPRO_FORCE_SP")   # hillclimb A/B switch
+    use_sp = attn_only if force_sp is None else force_sp == "1"
+    act_spec = make_act_constrainer(
+        mesh, dp if batch_shardable else None,
+        sequence_parallel=(shape.kind != "decode") and use_sp)
+
+    # MoE sharding hints: dispatch groups pinned to the dp axes on both the
+    # token view (G, Tg, D) and the buffer views (G, E, C, D); XLA places the
+    # G<->E all-to-all around the expert einsums (weights are E-data/F-model).
+    from repro.models import moe as moe_mod
+    if cfg.moe_groups > 1:
+        g_axes = tuple(dp) + (("model",) if cfg.moe_groups > _dpsz else ())
+        moe_mod.set_shard_hints(tokens=(g_axes,), experts=(g_axes,))
+    else:
+        moe_mod.set_shard_hints(None, None)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        ab_opt = adamw.abstract_state(ab_params)
+        oshard = shd.shard_opt_state(ab_opt, pshard, mesh)
+        opt_specs = shd.abstract_with_shardings(ab_opt, oshard)
+        batch = shd.batch_specs(cfg, shape, mesh)
+        fn = build_train_step(model, opt_cfg, act_spec=act_spec,
+                              microbatches=cfg.train_microbatches)
+        # pin outputs to the input shardings: params/opt round-trip stably
+        # and donation can alias their buffers
+        metric_sh = NamedSharding(mesh, P())
+        out_sh = (pshard, oshard,
+                  {k: metric_sh for k in
+                   ("loss", "xent", "moe_aux", "grad_norm", "lr")})
+        return CellPlan(arch, shape, cfg, mesh, fn,
+                        (params_specs, opt_specs, batch), donate=(0, 1),
+                        context_parallel=False, out_shardings=out_sh)
+
+    logits_sh = NamedSharding(
+        mesh, P(dp if batch_shardable else None, None, "model"))
+
+    if shape.kind == "prefill":
+        batch = shd.batch_specs(cfg, shape, mesh)
+        fn = build_prefill_step(model, act_spec=act_spec)
+        return CellPlan(arch, shape, cfg, mesh, fn, (params_specs, batch),
+                        donate=(), context_parallel=False,
+                        out_shardings=logits_sh)
+
+    # decode
+    cache_specs, (seq_axes, batch_axes) = shd.cache_specs(model, cfg, shape,
+                                                          mesh)
+    batch = shd.batch_specs(cfg, shape, mesh)
+    tok = batch["tokens"]
+    pos = jax.ShapeDtypeStruct((), np.int32,
+                               sharding=NamedSharding(mesh, P()))
+    cp_spec = (seq_axes, batch_axes) if seq_axes else None
+    fn = build_decode_step(model, cp_spec, act_spec=act_spec)
+    cache_sh = jax.tree.map(lambda s: s.sharding, cache_specs)
+    out_sh = (logits_sh, cache_sh)
+    return CellPlan(arch, shape, cfg, mesh, fn,
+                    (params_specs, cache_specs, tok, pos), donate=(1,),
+                    context_parallel=bool(seq_axes), out_shardings=out_sh)
+
+
+def lower_cell(plan: CellPlan):
+    """Lower (no execution). Must be called inside ``with plan.mesh``."""
+    kw = {}
+    if plan.out_shardings is not None:
+        kw["out_shardings"] = plan.out_shardings
+    jfn = jax.jit(plan.fn, donate_argnums=plan.donate, **kw)
+    return jfn.lower(*plan.args)

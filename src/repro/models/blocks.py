@@ -1,0 +1,264 @@
+"""Layer blocks: init + apply for every (mixer, ffn) slot kind.
+
+A *slot* is one layer of the repeating pattern. Parameters of a slot are
+stacked over the ``repeats`` axis and consumed by ``lax.scan`` in model.py.
+Every block is residual-pre-norm; ``parallel_block`` (command-r) computes
+attention and FFN from the same normed input.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (apply_rope, dense, init_dense, init_scale,
+                                 rms_norm)
+from repro.models.mlp import mlp_apply, mlp_init
+
+
+def _attn_init(key, cfg: ArchConfig, dtype, cross: bool = False) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], D, H * hd, dtype),
+        "wk": init_dense(ks[1], D, KV * hd, dtype),
+        "wv": init_dense(ks[2], D, KV * hd, dtype),
+        "wo": init_dense(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_scale(hd, dtype)
+        p["k_norm"] = init_scale(hd, dtype)
+    return p
+
+
+def _ffn_init(key, cfg: ArchConfig, kind: str, dtype) -> Optional[Dict]:
+    if kind == "dense":
+        return mlp_init(key, cfg.d_model, cfg.d_ff, dtype, cfg.act)
+    if kind == "moe":
+        return moe_mod.moe_init(key, cfg.d_model, cfg.expert_d_ff,
+                                cfg.n_experts, dtype)
+    return None
+
+
+def slot_init(key, cfg: ArchConfig, mixer: str, ffn: str, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict = {"norm1": init_scale(cfg.d_model, dtype)}
+    if mixer == "attn":
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+    elif mixer == "xattn":
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+        p["xnorm"] = init_scale(cfg.d_model, dtype)
+        p["xattn"] = _attn_init(ks[3], cfg, dtype, cross=True)
+    elif mixer == "mamba":
+        dims = ssm_mod.mamba_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_p,
+                                  cfg.ssm_state, cfg.ssm_conv)
+        p["mamba"] = ssm_mod.mamba_init(ks[0], dims, dtype)
+    elif mixer == "mlstm":
+        p["mlstm"] = xlstm_mod.mlstm_init(
+            ks[0], xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads), dtype)
+    elif mixer == "slstm":
+        p["slstm"] = xlstm_mod.slstm_init(
+            ks[0], xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads), dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = init_scale(cfg.d_model, dtype)
+        p["ffn"] = _ffn_init(ks[1], cfg, ffn, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _attention_apply(p: Dict, cfg: ArchConfig, x, positions, *,
+                     causal: bool, kv_override=None, impl: str = "chunked"):
+    """x (B,S,D). kv_override: (k, v) for cross-attention (pre-projected)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = dense(x, p["wk"]).reshape(B, S, KV, hd)
+        v = dense(x, p["wv"]).reshape(B, S, KV, hd)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kv_override is None and not cfg.learned_pos:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if impl == "ref":
+        o = attn_mod.ref_attention(q, k, v, causal=causal,
+                                   window=cfg.sliding_window)
+    else:
+        o = attn_mod.chunked_attention(q, k, v, causal=causal,
+                                       window=cfg.sliding_window,
+                                       block_kv=cfg.attn_block_kv)
+    return dense(o.reshape(B, S, H * hd), p["wo"]), (k, v)
+
+
+def slot_apply(p: Dict, cfg: ArchConfig, mixer: str, ffn: str, x, positions,
+               *, causal: bool = True, enc_out=None, impl: str = "chunked"
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer. Returns (x, moe_aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+
+    if mixer in ("attn", "xattn"):
+        mix_out, _ = _attention_apply(p["attn"], cfg, h, positions,
+                                      causal=causal, impl=impl)
+    elif mixer == "mamba":
+        dims = ssm_mod.mamba_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_p,
+                                  cfg.ssm_state, cfg.ssm_conv)
+        mix_out = ssm_mod.mamba_apply(p["mamba"], h, dims, cfg.ssm_chunk)
+    elif mixer == "mlstm":
+        mix_out = xlstm_mod.mlstm_apply(
+            p["mlstm"], h, xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads),
+            cfg.ssm_chunk)
+    elif mixer == "slstm":
+        mix_out = xlstm_mod.slstm_apply(
+            p["slstm"], h, xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads),
+            max(cfg.ssm_chunk, 16))
+    else:
+        raise ValueError(mixer)
+
+    if cfg.parallel_block and ffn != "none":
+        # command-r: y = x + attn(norm(x)) + ffn(norm(x)) (single norm)
+        f_out, aux = _ffn_apply(p, cfg, ffn, h)
+        return x + mix_out + f_out, aux
+
+    x = x + mix_out
+
+    if mixer == "xattn":
+        B = x.shape[0]
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        Senc = enc_out.shape[1]
+        ek = dense(enc_out, p["xattn"]["wk"]).reshape(B, Senc, KV, hd)
+        ev = dense(enc_out, p["xattn"]["wv"]).reshape(B, Senc, KV, hd)
+        hx = rms_norm(x, p["xnorm"], cfg.norm_eps)
+        xo, _ = _attention_apply(p["xattn"], cfg, hx, positions,
+                                 causal=False, kv_override=(ek, ev), impl=impl)
+        x = x + xo
+
+    if ffn != "none":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        f_out, aux = _ffn_apply(p, cfg, ffn, h2)
+        x = x + f_out
+    return x, aux
+
+
+def _ffn_apply(p: Dict, cfg: ArchConfig, kind: str, h):
+    if kind == "dense":
+        return mlp_apply(p["ffn"], h, cfg.act), jnp.float32(0.0)
+    y, aux, _stats = moe_mod.moe_apply(
+        p["ffn"], h, n_experts=cfg.n_experts, top_k=cfg.experts_per_tok,
+        capacity_factor=cfg.capacity_factor, ws_rebalance=cfg.ws_rebalance,
+        n_groups=cfg.moe_groups)
+    return y, aux * cfg.router_aux_coef
+
+
+# ---------------------------------------------------------------------------
+# decode-step apply (single token, stateful caches)
+# ---------------------------------------------------------------------------
+
+def slot_cache_init(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
+                    dtype) -> Dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if mixer in ("attn", "xattn"):
+        c = {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+             "v": jnp.zeros((batch, max_seq, KV, hd), dtype)}
+        if mixer == "xattn":
+            c["xk"] = jnp.zeros((batch, cfg.encoder_seq_len, KV, hd), dtype)
+            c["xv"] = jnp.zeros((batch, cfg.encoder_seq_len, KV, hd), dtype)
+        return c
+    if mixer == "mamba":
+        dims = ssm_mod.mamba_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_p,
+                                  cfg.ssm_state, cfg.ssm_conv)
+        return ssm_mod.mamba_cache_init(dims, batch, dtype)
+    if mixer == "mlstm":
+        return xlstm_mod.mlstm_cache_init(
+            xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads), batch)
+    if mixer == "slstm":
+        return xlstm_mod.slstm_cache_init(
+            xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads), batch)
+    raise ValueError(mixer)
+
+
+def slot_decode(p: Dict, cfg: ArchConfig, mixer: str, ffn: str, x, cache: Dict,
+                pos, cp_axes=None) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    """x (B,1,D); pos scalar int32 (0-based index of this token).
+    ``cp_axes``: mesh axes sharding the KV-cache sequence dim (long-context
+    decode) — attention goes through the shard_map partial-softmax path.
+
+    Returns (x, new_cache, aux).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+
+    if mixer in ("attn", "xattn"):
+        q = dense(h, p["attn"]["wq"]).reshape(B, 1, H, hd)
+        k = dense(h, p["attn"]["wk"]).reshape(B, 1, KV, hd)
+        v = dense(h, p["attn"]["wv"]).reshape(B, 1, KV, hd)
+        if cfg.qk_norm and "q_norm" in p["attn"]:
+            q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+        if not cfg.learned_pos:
+            pp = jnp.full((B, 1), pos, jnp.int32)
+            q = apply_rope(q, pp, cfg.rope_theta)
+            k = apply_rope(k, pp, cfg.rope_theta)
+        if cp_axes:
+            seq_axes, batch_axes = cp_axes
+            cp_fn = attn_mod.make_cp_decode_attention(tuple(seq_axes),
+                                                      tuple(batch_axes))
+            o, kc, vc = cp_fn(q, cache["k"], cache["v"], k, v, pos, pos + 1,
+                              window=cfg.sliding_window)
+            cache = dict(cache, k=kc, v=vc)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            cache = dict(cache, k=kc, v=vc)
+            o = attn_mod.decode_attention(q, kc, vc, pos + 1,
+                                          window=cfg.sliding_window)
+        mix_out = dense(o.reshape(B, 1, H * hd), p["attn"]["wo"])
+    elif mixer == "mamba":
+        dims = ssm_mod.mamba_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_p,
+                                  cfg.ssm_state, cfg.ssm_conv)
+        mix_out, cache = ssm_mod.mamba_decode_step(p["mamba"], h, cache, dims)
+    elif mixer == "mlstm":
+        mix_out, cache = xlstm_mod.mlstm_decode_step(
+            p["mlstm"], h, cache, xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads))
+    elif mixer == "slstm":
+        mix_out, cache = xlstm_mod.slstm_decode_step(
+            p["slstm"], h, cache, xlstm_mod.xlstm_dims(cfg.d_model, cfg.n_heads))
+    else:
+        raise ValueError(mixer)
+
+    if cfg.parallel_block and ffn != "none":
+        f_out, aux = _ffn_apply(p, cfg, ffn, h)
+        return x + mix_out + f_out, cache, aux
+
+    x = x + mix_out
+
+    if mixer == "xattn":
+        hx = rms_norm(x, p["xnorm"], cfg.norm_eps)
+        q = dense(hx, p["xattn"]["wq"]).reshape(B, 1, H, hd)
+        o = attn_mod.decode_attention(q, cache["xk"], cache["xv"],
+                                      cfg.encoder_seq_len)
+        x = x + dense(o.reshape(B, 1, H * hd), p["xattn"]["wo"])
+
+    if ffn != "none":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        f_out, aux = _ffn_apply(p, cfg, ffn, h2)
+        x = x + f_out
+    return x, cache, aux

@@ -1,0 +1,34 @@
+"""Feed-forward layers: SwiGLU / GeLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    if act == "swiglu":
+        g = dense(x, params["w_gate"])
+        u = dense(x, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return dense(h, params["w_down"])
+    if act == "gelu":
+        h = dense(x, params["w_up"])
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+        return dense(h, params["w_down"])
+    raise ValueError(act)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, act: str = "swiglu") -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": init_dense(ks[0], d_model, d_ff, dtype),
+        "w_down": init_dense(ks[1], d_ff, d_model, dtype),
+    }

@@ -1,0 +1,297 @@
+"""Unified model: init / abstract params, forward, loss, prefill, decode.
+
+One class covers all 10 assigned architectures through the
+``pattern × repeats`` layer stack (scan-over-layers with per-super-block
+remat), encoder-decoder wiring (whisper), vision/audio stub frontends
+(assignment: ``input_specs()`` supplies precomputed frame/patch embeddings),
+vocab padding for shardability, and tied embeddings.
+
+Batch dict keys (dtype int32 unless noted):
+  tokens  (B, S)            decoder-only / decoder side
+  labels  (B, S)            next-token targets (pre-shifted by the pipeline)
+  vis_embeds (B, P, D) bf16 VLM patch-embedding prefix        [vlm only]
+  frames  (B, Senc, D) bf16 audio frame embeddings            [audio only]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as blk
+from repro.models.layers import embed, init_embed, init_scale, rms_norm, softmax_xent, init_dense
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: Dict = {
+            "tok_embed": init_embed(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+            "final_norm": init_scale(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_dense(keys[1], cfg.d_model,
+                                           cfg.padded_vocab, dt)
+        if cfg.learned_pos:
+            params["pos_embed"] = init_embed(keys[2], max(cfg.max_position, 1),
+                                             cfg.d_model, dt)
+
+        def stack_slots(key, pattern, repeats):
+            out = {}
+            for j, (mixer, ffn) in enumerate(pattern):
+                kj = jax.random.fold_in(key, j)
+                leaves = [blk.slot_init(jax.random.fold_in(kj, r), cfg, mixer,
+                                        ffn, dt) for r in range(repeats)]
+                out[f"slot{j}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *leaves)
+            return out
+
+        params["layers"] = stack_slots(keys[3], cfg.pattern, cfg.repeats)
+
+        if cfg.is_encoder_decoder:
+            enc_pat = (("attn", "dense"),)
+            params["encoder"] = {
+                "layers": stack_slots(keys[4], enc_pat, cfg.n_encoder_layers),
+                "norm": init_scale(cfg.d_model, dt),
+                "pos": init_embed(keys[5], max(cfg.encoder_seq_len, 1),
+                                  cfg.d_model, dt),
+            }
+        return params
+
+    def abstract_params(self) -> Dict:
+        """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    def param_count(self) -> int:
+        shapes = self.abstract_params()
+        import numpy as np
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def _encode(self, params, frames, impl: str):
+        cfg = self.cfg
+        x = frames + params["encoder"]["pos"][None, :frames.shape[1]]
+        pos = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                               frames.shape[:2]).astype(jnp.int32)
+
+        def body(carry, slot_params):
+            h, = carry
+            h, _ = blk.slot_apply(slot_params["slot0"], cfg, "attn", "dense",
+                                  h, pos, causal=False, impl=impl)
+            return (h,), None
+
+        (x,), _ = lax.scan(jax.checkpoint(body, prevent_cse=False), (x,),
+                           params["encoder"]["layers"])
+        return rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+    def forward(self, params: Dict, batch: Dict, impl: str = "chunked",
+                act_spec=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits (B, S_text, Vpad), moe_aux).
+
+        ``act_spec``: optional PartitionSpec for hidden activations
+        (B, S, D) — constrains GSPMD to batch-DP layout (launch/steps.py
+        passes P(dp_axes, None, None)); without it XLA may pick a
+        batch-replicated layout from the FSDP param shardings.
+        """
+        cfg = self.cfg
+
+        def constrain(h, full_seq: bool = False):
+            if act_spec is None:
+                return h
+            if callable(act_spec):
+                try:
+                    return act_spec(h, full_seq=full_seq)
+                except TypeError:
+                    return act_spec(h)
+            return lax.with_sharding_constraint(h, act_spec)
+
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed(tokens, params["tok_embed"])
+        prefix = 0
+        if cfg.vision_prefix_len and "vis_embeds" in batch:
+            vis = batch["vis_embeds"].astype(x.dtype)
+            prefix = vis.shape[1]
+            x = jnp.concatenate([vis, x], axis=1)
+        Sfull = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sfull), (B, Sfull)).astype(jnp.int32)
+        if cfg.learned_pos:
+            x = x + params["pos_embed"][None, :Sfull]
+        x = constrain(x)
+
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["frames"].astype(x.dtype), impl)
+            enc_out = constrain(enc_out)
+
+        def body(carry, slot_params):
+            h, aux = carry
+            for j, (mixer, ffn) in enumerate(cfg.pattern):
+                h, a = blk.slot_apply(slot_params[f"slot{j}"], cfg, mixer, ffn,
+                                      h, positions, causal=cfg.causal,
+                                      enc_out=enc_out, impl=impl)
+                h = constrain(h)
+                aux = aux + a
+            return (h, aux), None
+
+        (x, aux), _ = lax.scan(jax.checkpoint(body, prevent_cse=False),
+                               (x, jnp.float32(0.0)), params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if prefix:
+            x = x[:, prefix:]
+        head = (params["tok_embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jax.lax.dot_general(
+            x, head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return logits, aux
+
+    def loss_fn(self, params: Dict, batch: Dict, impl: str = "chunked",
+                act_spec=None):
+        logits, aux = self.forward(params, batch, impl, act_spec=act_spec)
+        xent = softmax_xent(logits, batch["labels"])
+        loss = xent + aux
+        return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+    # ------------------------------------------------------------------
+    # serving: cache init + single-token decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Dict:
+        cfg = self.cfg
+        cache: Dict = {"layers": {}}
+        for j, (mixer, _ffn) in enumerate(cfg.pattern):
+            entries = [blk.slot_cache_init(cfg, mixer, batch_size, max_seq,
+                                           dtype) for _ in range(cfg.repeats)]
+            cache["layers"][f"slot{j}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *entries)
+        return cache
+
+    def abstract_cache(self, batch_size: int, max_seq: int,
+                       dtype=jnp.bfloat16) -> Dict:
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch_size, max_seq, dtype))
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jnp.ndarray,
+                    pos, embeds: Optional[jnp.ndarray] = None, cp_axes=None,
+                    act_spec=None) -> Tuple[jnp.ndarray, Dict]:
+        """tokens (B, 1); pos: scalar int32 position of this token.
+        ``embeds`` (B, 1, D) overrides token embedding (vision/audio prefix
+        positions during prefill). Returns (logits (B, 1, Vpad), new_cache).
+        """
+        cfg = self.cfg
+        x = embed(tokens, params["tok_embed"]) if embeds is None \
+            else embeds.astype(_dtype(cfg))
+        if cfg.learned_pos:
+            x = x + lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1)[None]
+        if act_spec is not None:
+            x = act_spec(x) if callable(act_spec) \
+                else lax.with_sharding_constraint(x, act_spec)
+
+        def body(h, inp):
+            slot_params, slot_cache = inp
+            new_cache = {}
+            for j, (mixer, ffn) in enumerate(cfg.pattern):
+                h, c, _ = blk.slot_decode(slot_params[f"slot{j}"], cfg, mixer,
+                                          ffn, h, slot_cache[f"slot{j}"], pos,
+                                          cp_axes=cp_axes)
+                new_cache[f"slot{j}"] = c
+            return h, new_cache
+
+        x, new_layer_cache = lax.scan(body, x,
+                                      (params["layers"], cache["layers"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["tok_embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jax.lax.dot_general(
+            x, head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return logits, {"layers": new_layer_cache}
+
+    def prefill(self, params: Dict, batch: Dict, max_seq: int,
+                dtype=jnp.bfloat16) -> Tuple[Dict, jnp.ndarray]:
+        """Sequential prefill via decode steps (reference path for tests and
+        small-scale serving; production prefill lowers ``forward``)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        need = S + (batch["vis_embeds"].shape[1]
+                    if cfg.vision_prefix_len and "vis_embeds" in batch else 0)
+        assert max_seq >= need, f"prefill cache too small: {max_seq} < {need}"
+        cache = self.init_cache(B, max_seq, dtype)
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["frames"].astype(_dtype(cfg)),
+                                   "chunked")
+            cache = self._write_cross_cache(params, cache, enc_out)
+
+        prefix = 0
+        if cfg.vision_prefix_len and "vis_embeds" in batch:
+            vis = batch["vis_embeds"]
+            prefix = vis.shape[1]
+
+            def vis_step(cache, i):
+                e = lax.dynamic_slice_in_dim(vis, i, 1, axis=1)
+                _, cache = self.decode_step(params, cache,
+                                            jnp.zeros((B, 1), jnp.int32), i,
+                                            embeds=e)
+                return cache, None
+
+            cache, _ = lax.scan(vis_step, cache, jnp.arange(prefix))
+
+        def step(carry, i):
+            cache, _ = carry
+            tok = lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            logits, cache = self.decode_step(params, cache, tok, prefix + i)
+            return (cache, logits), None
+
+        (cache, logits), _ = lax.scan(step, (cache,
+                                             jnp.zeros((B, 1, cfg.padded_vocab),
+                                                       jnp.float32)),
+                                      jnp.arange(S))
+        return cache, logits
+
+    def _write_cross_cache(self, params: Dict, cache: Dict, enc_out) -> Dict:
+        """Project encoder output into each decoder layer's cross-K/V cache."""
+        cfg = self.cfg
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        B, Senc, _ = enc_out.shape
+
+        for j, (mixer, _f) in enumerate(cfg.pattern):
+            if mixer != "xattn":
+                continue
+            slot_p = params["layers"][f"slot{j}"]
+
+            def per_layer(pl):
+                k = jnp.einsum("bsd,dk->bsk", enc_out, pl["xattn"]["wk"].astype(enc_out.dtype))
+                v = jnp.einsum("bsd,dk->bsk", enc_out, pl["xattn"]["wv"].astype(enc_out.dtype))
+                return (k.reshape(B, Senc, KV, hd), v.reshape(B, Senc, KV, hd))
+
+            ks, vs = jax.vmap(per_layer)(slot_p)  # over repeats axis
+            slot_cache = dict(cache["layers"][f"slot{j}"])
+            slot_cache["xk"] = ks.astype(slot_cache["xk"].dtype)
+            slot_cache["xv"] = vs.astype(slot_cache["xv"].dtype)
+            cache["layers"][f"slot{j}"] = slot_cache
+        return cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k routing, capacity, WS overflow rebalance.
+
+Dispatch is scatter-based (no (T, E, C) one-hot tensors): each token computes
+its (expert, slot) coordinates; tokens are scattered into a per-expert buffer
+``(E, C, D)``, run through batched expert FFNs, and gathered back.
+
+**Work-stealing overflow rebalance** (beyond-paper feature, see DESIGN.md §3):
+with ``ws_rebalance=True``, tokens that overflow an expert's capacity are not
+dropped; idle capacity in other experts "steals" them (tokens are reassigned
+to the least-loaded experts, mirroring the paper's idle-processor steal).
+This trades routing fidelity for zero token drops — exactly the
+load-balancing trade the WS literature studies, applied to expert dispatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+
+class MoEStats(NamedTuple):
+    dropped: jnp.ndarray       # fraction of (token, k) assignments dropped
+    stolen: jnp.ndarray        # fraction rebalanced by WS overflow stealing
+    load_std: jnp.ndarray      # std of per-expert load (balance metric)
+
+
+# Launch-level sharding hints (set by repro.launch.steps before lowering;
+# None outside a mesh context). Kept module-level so model code stays
+# mesh-agnostic: specs are axis-name tuples resolved against the ambient mesh.
+_SHARD_HINTS = {"tokens": None, "experts": None}
+
+
+def set_shard_hints(tokens=None, experts=None):
+    _SHARD_HINTS["tokens"] = tokens
+    _SHARD_HINTS["experts"] = experts
+
+
+def _hint(x, kind):
+    spec = _SHARD_HINTS.get(kind)
+    if spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(*spec, *((None,) * (x.ndim - len(spec)))))
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    def exp_init(k, d_in, d_out):
+        keys = jax.random.split(k, n_experts)
+        return jnp.stack([init_dense(kk, d_in, d_out, dtype) for kk in keys])
+    return {
+        "router": init_dense(ks[0], d_model, n_experts, jnp.float32, scale=0.02),
+        "w_gate": exp_init(ks[1], d_model, d_ff),
+        "w_up": exp_init(ks[2], d_model, d_ff),
+        "w_down": exp_init(ks[3], d_ff, d_model),
+    }
+
+
+def _expert_ffn(params: dict, xb: jnp.ndarray) -> jnp.ndarray:
+    """xb: (E, C, D) -> (E, C, D) via per-expert SwiGLU (batched matmul)."""
+    g = jnp.einsum("ecd,edf->ecf", xb, params["w_gate"].astype(xb.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, params["w_up"].astype(xb.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xb.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xb.dtype))
+
+
+def _route_group(xt, router, n_experts, top_k, C, ws_rebalance):
+    """Per-group routing: xt (Tg, D) -> dispatch coords + gates + stats."""
+    Tg = xt.shape[0]
+    logits = dense(xt.astype(jnp.float32), router)                  # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)             # (Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], n_experts), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(-1)                                 # (Tg*k,)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - 1
+    slot = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+    load = onehot.sum(axis=0)                                       # (E,)
+
+    overflow = slot >= C
+    dropped = overflow.mean()
+    stolen = jnp.float32(0.0)
+
+    if ws_rebalance:
+        # Idle capacity steals overflow tokens (paper's idle->steal,
+        # DESIGN.md §3): the o-th overflow assignment goes to the o-th free
+        # slot, walking experts by spare capacity (all O(Tg·E), jit-friendly).
+        spare = jnp.maximum(C - load, 0)
+        free_starts = jnp.cumsum(spare) - spare
+        total_free = spare.sum()
+        ov_rank = jnp.cumsum(overflow.astype(jnp.int32)) - 1
+        tgt_expert = jnp.searchsorted(jnp.cumsum(spare), ov_rank, side="right")
+        tgt_expert = jnp.clip(tgt_expert, 0, n_experts - 1).astype(jnp.int32)
+        tgt_slot = C - spare[tgt_expert] + (ov_rank - free_starts[tgt_expert])
+        can_steal = overflow & (ov_rank < total_free)
+        stolen = can_steal.mean()
+        flat_e = jnp.where(can_steal, tgt_expert, flat_e)
+        slot = jnp.where(can_steal, tgt_slot, slot)
+        overflow = overflow & ~can_steal
+        dropped = overflow.mean()
+
+    keep = ~overflow
+    slot_c = jnp.clip(slot, 0, C - 1)
+    gates = gate_vals.reshape(-1) * keep.astype(gate_vals.dtype)
+    return flat_e, slot_c, keep, gates, aux, dropped, stolen, load
+
+
+def moe_apply(params: dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, ws_rebalance: bool = False,
+              n_groups: int = 1):
+    """x: (B, S, D) -> (y, aux_loss, MoEStats).
+
+    GShard-style grouped dispatch: tokens split into ``n_groups`` independent
+    routing groups, each with its own capacity — groups map 1:1 onto data
+    shards so every dispatch buffer stays sharded (launch sets n_groups =
+    |dp axes| and the "groups"/"experts" hints below pin the layouts; XLA
+    inserts the all-to-all between the group-sharded and expert-sharded
+    views).
+    """
+    B, S, D = x.shape
+    T = B * S
+    G = n_groups if T % n_groups == 0 else 1
+    Tg = T // G
+    C = int(max(1, round(Tg * top_k * capacity_factor / n_experts)))
+
+    xg = _hint(x.reshape(G, Tg, D), "tokens")                       # (G,Tg,D)
+
+    route = jax.vmap(
+        lambda xt: _route_group(xt, params["router"], n_experts, top_k, C,
+                                ws_rebalance))
+    flat_e, slot_c, keep, gates, aux, dropped, stolen, load = route(xg)
+
+    # scatter tokens into (G, E, C, D)
+    tok_idx = jnp.repeat(jnp.arange(Tg), top_k)
+
+    def scatter_group(xt, fe, sc, kp):
+        buf = jnp.zeros((n_experts, C, D), x.dtype)
+        contrib = xt[tok_idx] * kp[:, None].astype(x.dtype)
+        return buf.at[fe, sc].add(contrib)
+
+    buf = jax.vmap(scatter_group)(xg, flat_e, slot_c, keep)         # (G,E,C,D)
+    buf = _hint(buf, "experts")
+
+    # expert FFN over all groups (batched); the G<->E resharding around these
+    # einsums is the MoE all-to-all.
+    g = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    out_buf = _hint(out_buf, "experts")
+
+    def gather_group(ob, fe, sc, gt):
+        gathered = ob[fe, sc]                                       # (Tg*k, D)
+        y = jnp.zeros((Tg, D), x.dtype)
+        return y.at[tok_idx].add(gathered * gt[:, None].astype(x.dtype))
+
+    y = jax.vmap(gather_group)(out_buf, flat_e, slot_c, gates)      # (G,Tg,D)
+    y = _hint(y, "tokens").reshape(B, S, D)
+
+    stats = MoEStats(dropped=dropped.mean(), stolen=stolen.mean(),
+                     load_std=jnp.std(load.sum(0).astype(jnp.float32)))
+    return y, aux.mean(), stats

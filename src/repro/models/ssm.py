@@ -1,0 +1,178 @@
+"""Selective SSM (Mamba) block in chunked SSD form — TPU-native adaptation.
+
+Jamba's Mamba-1 layers use a per-(channel, state) selective scan whose
+natural implementation is a sequential recurrence — a poor fit for the MXU
+(see DESIGN.md §7). We implement the **SSD / Mamba-2 formulation**: scalar
+decay per head, chunked computation where the intra-chunk part is an
+attention-like batched matmul and the inter-chunk part is a short
+``lax.scan`` over chunk states. Same selective-SSM model class; the chunked
+form is matmul-dominated and TPU-friendly, and the decode step is an O(1)
+state update (what makes ``long_500k`` runnable for SSM/hybrid archs).
+
+Shapes: d_inner = expand * d_model; heads Hm = d_inner / head_p;
+x/v: (B, S, Hm, P), B/C projections: (B, S, N) shared across heads (G=1),
+dt: (B, S, Hm), A: (Hm,) negative scalars. State: (B, Hm, P, N).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, init_dense
+
+
+class MambaDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int        # Hm
+    head_p: int         # P = d_inner / Hm
+    d_state: int        # N
+    d_conv: int         # K
+
+
+def mamba_dims(d_model: int, expand: int = 2, head_p: int = 64,
+               d_state: int = 16, d_conv: int = 4) -> MambaDims:
+    d_inner = expand * d_model
+    return MambaDims(d_model, d_inner, d_inner // head_p, head_p, d_state, d_conv)
+
+
+def mamba_init(key, dims: MambaDims, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    E, N, Hm, K = dims.d_inner, dims.d_state, dims.n_heads, dims.d_conv
+    return {
+        "in_proj": init_dense(ks[0], dims.d_model, 2 * E, dtype),   # x, z
+        "conv_w": (jax.random.normal(ks[1], (K, E), jnp.float32)
+                   * (1.0 / math.sqrt(K))).astype(dtype),
+        "bc_proj": init_dense(ks[2], E, 2 * N, dtype),              # B, C
+        "dt_proj": init_dense(ks[3], E, Hm, dtype),
+        "dt_bias": jnp.zeros((Hm,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hm)).astype(jnp.float32),
+        "D": jnp.ones((Hm,), jnp.float32),
+        "out_proj": init_dense(ks[4], E, dims.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,E), w (K,E)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,Hm,P), Bm/Cm (B,S,N), dt (B,S,Hm) >= 0, A (Hm,) < 0.
+    Returns y (B,S,Hm,P) f32 and final state (B,Hm,P,N) f32.
+    """
+    Bsz, S, Hm, P = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    nchunks = S // L
+    assert nchunks * L == S, f"S={S} not divisible by chunk={L}"
+
+    xc = xh.reshape(Bsz, nchunks, L, Hm, P)
+    Bc = Bm.reshape(Bsz, nchunks, L, N)
+    Cc = Cm.reshape(Bsz, nchunks, L, N)
+    dtc = dt.reshape(Bsz, nchunks, L, Hm)
+
+    def chunk_step(h, blk):
+        xk, bk, ck, dk = blk          # (B,L,Hm,P), (B,L,N), (B,L,N), (B,L,Hm)
+        la = dk * A                    # (B,L,Hm)  <= 0
+        cs = jnp.cumsum(la, axis=1)    # (B,L,Hm)
+        # intra-chunk: y[t] += sum_{s<=t} exp(cs_t - cs_s) (C_t.B_s) dt_s x_s
+        seg = cs[:, :, None, :] - cs[:, None, :, :]           # (B,L,L,Hm)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        # constant additive mask on the exponent: finite-safe backward (the
+        # inf*0=nan trap) without a data-dependent where() whose predicate
+        # would be saved per chunk step.
+        seg = seg + jnp.where(tri, 0.0, -jnp.inf)[None, :, :, None]
+        decay = jnp.exp(seg)
+        scores = jnp.einsum("btn,bsn->bts", ck.astype(jnp.float32),
+                            bk.astype(jnp.float32))           # (B,L,L)
+        w = decay * scores[..., None] * dk[:, None, :, :]     # (B,L,L,Hm)
+        y_diag = jnp.einsum("btsh,bshp->bthp", w, xk.astype(jnp.float32))
+        # inter-chunk: y[t] += (C_t . h) * exp(cs_t)
+        y_off = jnp.einsum("btn,bhpn->bthp", ck.astype(jnp.float32), h) \
+            * jnp.exp(cs)[..., None]
+        # state update: h' = exp(cs_last) h + sum_s exp(cs_last - cs_s) dt_s x_s B_s
+        rem = jnp.exp(cs[:, -1:, :] - cs)                     # (B,L,Hm)
+        contrib = jnp.einsum("blhp,bln->bhpn",
+                             xk.astype(jnp.float32) * (dk * rem)[..., None],
+                             bk.astype(jnp.float32))
+        h_new = h * jnp.exp(cs[:, -1, :])[..., None, None] + contrib
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((Bsz, Hm, P, N), jnp.float32)
+    h_fin, yc = lax.scan(jax.checkpoint(chunk_step), h0,
+                         (xc.transpose(1, 0, 2, 3, 4),
+                          Bc.transpose(1, 0, 2, 3),
+                          Cc.transpose(1, 0, 2, 3),
+                          dtc.transpose(1, 0, 2, 3)))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, Hm, P)
+    return y, h_fin
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, dims: MambaDims,
+                chunk: int = 128) -> jnp.ndarray:
+    """Full-sequence (training / prefill) forward. x: (B, S, D)."""
+    B, S, D = x.shape
+    E, Hm, P, N = dims.d_inner, dims.n_heads, dims.head_p, dims.d_state
+    xz = dense(x, params["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)                          # (B,S,E) each
+    xr = _causal_conv(xr, params["conv_w"])
+    xr = jax.nn.silu(xr.astype(jnp.float32)).astype(x.dtype)
+    bc = dense(xr, params["bc_proj"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                         # (B,S,N)
+    dt = jax.nn.softplus(
+        dense(xr, params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                              # (Hm,) < 0
+    xh = xr.reshape(B, S, Hm, P)
+    y, _ = _ssd_chunked(xh, Bm, Cm, dt, A, chunk)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B, S, E)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return dense(y.astype(x.dtype), params["out_proj"])
+
+
+def mamba_cache_init(dims: MambaDims, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, dims.n_heads, dims.head_p, dims.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, x: jnp.ndarray, cache: dict,
+                      dims: MambaDims) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. x: (B, 1, D) -> (B, 1, D); O(1) state update."""
+    B = x.shape[0]
+    E, Hm, P, N, K = (dims.d_inner, dims.n_heads, dims.head_p,
+                      dims.d_state, dims.d_conv)
+    xz = dense(x[:, 0], params["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)                          # (B,E)
+    window = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)  # (B,K,E)
+    conv_out = jnp.einsum("bke,ke->be", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xr = jax.nn.silu(conv_out).astype(x.dtype)
+    bc = dense(xr, params["bc_proj"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                         # (B,N)
+    dt = jax.nn.softplus(
+        dense(xr, params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(B, Hm, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                    # (B,Hm)
+    h = cache["h"] * decay[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B, E) * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), params["out_proj"])
+    new_cache = {"h": h, "conv": window[:, 1:]}
+    return out[:, None], new_cache

@@ -1,0 +1,242 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential with chunked remat).
+
+TPU adaptation notes (DESIGN.md §7): the mLSTM recurrence
+``C_t = f_t C_{t-1} + i_t v_t k_t^T`` with scalar per-head gates is a linear
+attention with data-dependent decay, so we evaluate it with the same chunked
+matmul scheme as the SSD scan (intra-chunk (L,L) kernel + inter-chunk state
+carry). Gates are sigmoid (bounded), so the exponential-gating stabilizer of
+the paper's appendix is unnecessary — noted as a simplification.
+
+sLSTM keeps true sequential semantics (its recurrent matrix R makes it
+non-linearizable); its state is tiny, so a chunked ``lax.scan`` with remat
+is adequate and decode is O(1).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, init_dense
+
+
+class XlstmDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    head_dim: int
+    proj_factor: float = 2.0
+
+
+def xlstm_dims(d_model: int, n_heads: int) -> XlstmDims:
+    return XlstmDims(d_model, n_heads, d_model // n_heads)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, dims: XlstmDims, dtype) -> dict:
+    D, H, hd = dims.d_model, dims.n_heads, dims.head_dim
+    E = int(dims.proj_factor * D)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": init_dense(ks[0], D, 2 * E, dtype),         # x, z gate
+        "wq": init_dense(ks[1], E, E, dtype),
+        "wk": init_dense(ks[2], E, E, dtype),
+        "wv": init_dense(ks[3], E, E, dtype),
+        "w_if": init_dense(ks[4], E, 2 * (E // hd), dtype),    # i, f per head
+        "out_norm": jnp.ones((E,), dtype),
+        "down_proj": init_dense(ks[5], E, D, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int):
+    """q/k/v (B,S,H,P); i/f gates (B,S,H) in (0,1). Returns y (B,S,H,P) f32
+    and final (C (B,H,P,P), n (B,H,P))."""
+    B, S, H, P = q.shape
+    L = min(chunk, S)
+    nchunks = S // L
+    assert nchunks * L == S
+    scale = P ** -0.5
+
+    qc = q.reshape(B, nchunks, L, H, P)
+    kc = k.reshape(B, nchunks, L, H, P)
+    vc = v.reshape(B, nchunks, L, H, P)
+    ic = i_gate.reshape(B, nchunks, L, H)
+    fc = f_gate.reshape(B, nchunks, L, H)
+
+    def step(carry, blk):
+        C, n = carry                   # (B,H,P,P), (B,H,P)
+        qk_, kk, vk, ik, fk = blk
+        lf = jnp.log(fk + 1e-9)        # (B,L,H) <= 0
+        cs = jnp.cumsum(lf, axis=1)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]            # (B,L,L,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        # constant additive mask (see ssm.py): finite-safe exp, no saved preds
+        seg = seg + jnp.where(tri, 0.0, -jnp.inf)[None, :, :, None]
+        decay = jnp.exp(seg)
+        scores = jnp.einsum("blhp,bshp->blsh", qk_.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * scale
+        w = scores * decay * ik[:, None, :, :]                 # (B,L,L,H)
+        y_diag = jnp.einsum("blsh,bshp->blhp", w, vk.astype(jnp.float32))
+        n_diag = jnp.einsum("blsh,bshp->blhp", decay * ik[:, None, :, :],
+                            kk.astype(jnp.float32))
+        dec_t = jnp.exp(cs)                                    # (B,L,H)
+        y_off = jnp.einsum("blhp,bhpr->blhr", qk_.astype(jnp.float32) * scale,
+                           C) * dec_t[..., None]
+        n_off = n[:, None] * dec_t[..., None]                  # (B,L,H,P)
+        y = y_diag + y_off
+        n_t = n_diag + n_off
+        denom = jnp.abs(jnp.einsum("blhp,blhp->blh",
+                                   qk_.astype(jnp.float32) * scale, n_t))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+        # carry update
+        rem = jnp.exp(cs[:, -1:, :] - cs) * ik                 # (B,L,H)
+        C_new = C * jnp.exp(cs[:, -1])[..., None, None] + \
+            jnp.einsum("blhp,blhr->bhpr", kk.astype(jnp.float32) * rem[..., None],
+                       vk.astype(jnp.float32))
+        n_new = n * jnp.exp(cs[:, -1])[..., None] + \
+            jnp.einsum("blhp,blh->bhp", kk.astype(jnp.float32), rem)
+        return (C_new, n_new), y
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    (Cf, nf), yc = lax.scan(jax.checkpoint(step), (C0, n0),
+                            (qc.transpose(1, 0, 2, 3, 4),
+                             kc.transpose(1, 0, 2, 3, 4),
+                             vc.transpose(1, 0, 2, 3, 4),
+                             ic.transpose(1, 0, 2, 3),
+                             fc.transpose(1, 0, 2, 3)))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, (Cf, nf)
+
+
+def mlstm_apply(params: dict, x: jnp.ndarray, dims: XlstmDims,
+                chunk: int = 128) -> jnp.ndarray:
+    B, S, D = x.shape
+    E = int(dims.proj_factor * D)
+    hd = dims.head_dim
+    H = E // hd
+    xz = dense(x, params["up_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    q = dense(xr, params["wq"]).reshape(B, S, H, hd)
+    k = dense(xr, params["wk"]).reshape(B, S, H, hd)
+    v = dense(xr, params["wv"]).reshape(B, S, H, hd)
+    gif = dense(xr, params["w_if"]).astype(jnp.float32)
+    i_gate, f_gate = jnp.split(jax.nn.sigmoid(gif), 2, axis=-1)  # (B,S,H)
+    y, _ = _mlstm_chunked(q, k, v, i_gate, f_gate, chunk)
+    y = y.reshape(B, S, E)
+    y = y * params["out_norm"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return dense(y.astype(x.dtype), params["down_proj"])
+
+
+def mlstm_cache_init(dims: XlstmDims, batch: int) -> dict:
+    E = int(dims.proj_factor * dims.d_model)
+    H = E // dims.head_dim
+    P = dims.head_dim
+    return {"C": jnp.zeros((batch, H, P, P), jnp.float32),
+            "n": jnp.zeros((batch, H, P), jnp.float32)}
+
+
+def mlstm_decode_step(params, x, cache, dims: XlstmDims):
+    B = x.shape[0]
+    E = int(dims.proj_factor * dims.d_model)
+    hd = dims.head_dim
+    H = E // hd
+    scale = hd ** -0.5
+    xz = dense(x[:, 0], params["up_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    q = dense(xr, params["wq"]).reshape(B, H, hd).astype(jnp.float32) * scale
+    k = dense(xr, params["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = dense(xr, params["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    gif = dense(xr, params["w_if"]).astype(jnp.float32)
+    i_g, f_g = jnp.split(jax.nn.sigmoid(gif), 2, axis=-1)        # (B,H)
+    C = cache["C"] * f_g[..., None, None] + \
+        i_g[..., None, None] * jnp.einsum("bhp,bhr->bhpr", k, v)
+    n = cache["n"] * f_g[..., None] + i_g[..., None] * k
+    y = jnp.einsum("bhp,bhpr->bhr", q, C)
+    denom = jnp.abs(jnp.einsum("bhp,bhp->bh", q, n))
+    y = y / jnp.maximum(denom, 1.0)[..., None]
+    y = y.reshape(B, E) * params["out_norm"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), params["down_proj"])
+    return out[:, None], {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, dims: XlstmDims, dtype) -> dict:
+    D, H, hd = dims.d_model, dims.n_heads, dims.head_dim
+    ks = jax.random.split(key, 3)
+    # 4 gates (i, f, z, o), input + block-diagonal recurrent weights per head
+    return {
+        "w_in": init_dense(ks[0], D, 4 * D, dtype),
+        "r_rec": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32)
+                  / math.sqrt(hd)).astype(dtype),
+        "bias": jnp.zeros((4 * D,), jnp.float32),
+        "out_proj": init_dense(ks[2], D, D, dtype),
+    }
+
+
+def _slstm_cell(params, dims: XlstmDims, x_t, state):
+    """x_t: (B, 4D) pre-activations from input; state: dict of (B,H,hd)."""
+    H, hd = dims.n_heads, dims.head_dim
+    B = x_t.shape[0]
+    h_prev = state["h"]                                          # (B,H,hd)
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev.astype(jnp.float32),
+                     params["r_rec"].astype(jnp.float32))        # (B,H,4hd)
+    pre = x_t.reshape(B, H, 4 * hd).astype(jnp.float32) + rec + \
+        params["bias"].reshape(H, 4 * hd)
+    i, f, zc, o = jnp.split(pre, 4, axis=-1)                     # (B,H,hd)
+    i = jnp.exp(jnp.minimum(i, 10.0))  # exponential input gate (clamped)
+    f = jax.nn.sigmoid(f)
+    zc = jnp.tanh(zc)
+    o = jax.nn.sigmoid(o)
+    c = f * state["c"] + i * zc
+    n = f * state["n"] + i
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return {"h": h, "c": c, "n": n}, h
+
+
+def slstm_apply(params: dict, x: jnp.ndarray, dims: XlstmDims,
+                chunk: int = 256) -> jnp.ndarray:
+    B, S, D = x.shape
+    H, hd = dims.n_heads, dims.head_dim
+    pre = dense(x, params["w_in"])                               # (B,S,4D)
+    L = min(chunk, S)
+    nchunks = S // L
+    assert nchunks * L == S
+    prec = pre.reshape(B, nchunks, L, 4 * D)
+
+    def chunk_step(state, blk):
+        def inner(st, x_t):
+            st, h = _slstm_cell(params, dims, x_t, st)
+            return st, h
+        state, hs = lax.scan(inner, state, blk.transpose(1, 0, 2))
+        return state, hs
+
+    st0 = {k: jnp.zeros((B, H, hd), jnp.float32) for k in ("h", "c", "n")}
+    _, hc = lax.scan(jax.checkpoint(chunk_step), st0,
+                     prec.transpose(1, 0, 2, 3))
+    h = hc.transpose(2, 0, 1, 3, 4).reshape(B, S, D)  # (L,chunks,B,H,hd)->(B,S,D)
+    return dense(h.astype(x.dtype), params["out_proj"])
+
+
+def slstm_cache_init(dims: XlstmDims, batch: int) -> dict:
+    H, hd = dims.n_heads, dims.head_dim
+    return {k: jnp.zeros((batch, H, hd), jnp.float32) for k in ("h", "c", "n")}
+
+
+def slstm_decode_step(params, x, cache, dims: XlstmDims):
+    pre = dense(x[:, 0], params["w_in"])
+    new_state, h = _slstm_cell(params, dims, pre, cache)
+    B = x.shape[0]
+    out = dense(h.reshape(B, -1).astype(x.dtype), params["out_proj"])
+    return out[:, None], new_state

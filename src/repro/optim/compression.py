@@ -1,0 +1,68 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) axis.
+
+Cross-pod gradient all-reduce is the slow collective at multi-pod scale
+(50 GB/s links vs 819 GB/s HBM). We quantize each gradient tensor to int8
+with a per-tensor scale before the cross-pod reduction and keep the
+quantization residual in an error-feedback buffer (Karimireddy et al.-style
+EF-SGD), which restores convergence to the uncompressed trajectory.
+
+``compress/decompress`` are pure and jit-safe; ``ef_step`` threads the error
+state through the optimizer. In the jitted train step the quantize ->
+(cross-pod psum) -> dequantize sandwich is expressed on the values XLA
+already all-reduces; on a real fleet the psum itself runs on the int8
+payload (4x wire reduction) — the numerics here are identical.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: Any          # pytree like grads, f32
+
+
+def init_ef(params) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def abstract_ef(params_spec) -> EFState:
+    return jax.eval_shape(init_ef, params_spec)
+
+
+def compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """f32 tensor -> (int8 payload, f32 scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, ef: EFState) -> Tuple[Any, EFState]:
+    """Quantize (grads + error); new error = input − dequantized output."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = compress(target)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, EFState(error=new_e)
+
+
+def wire_bytes(params) -> Tuple[int, int]:
+    """(uncompressed, compressed) cross-pod bytes per step for a param tree."""
+    import numpy as np
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    return 4 * n, 1 * n + 4 * len(jax.tree.leaves(params))

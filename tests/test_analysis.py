@@ -1,0 +1,60 @@
+"""Analysis layer: bound formulas, fits, acceptable-latency solver (paper §4)."""
+import numpy as np
+
+from repro.core import analysis
+
+
+def test_bound_formula():
+    # W/p + 16 λ log2(W/λ) with γ=4
+    b = analysis.makespan_bound(2**20, 32, 2)
+    expect = 2**20 / 32 + 16 * 2 * np.log2(2**20 / 2)
+    assert abs(b - expect) < 1e-6
+
+
+def test_overhead_ratio_inverts_term():
+    W, p, lam = 10**6, 64, 50
+    sim_time = W / p + analysis.overhead_term(W, lam) / 4.5  # ratio should be 4.5
+    r = analysis.overhead_ratio(sim_time, W, p, lam)
+    assert abs(r - 4.5) < 1e-9
+
+
+def test_fitted_constant_roundtrip():
+    W, p, lam, c = 10**7, 128, 100, 3.8
+    sim = analysis.predicted_makespan(W, p, lam, c=c)
+    fit = analysis.fitted_constant(sim, W, p, lam)
+    assert abs(fit - c) < 1e-9
+
+
+def test_limit_latency_monotone_in_Wp():
+    lams = [analysis.theoretical_limit_latency(W, 32) for W in (10**5, 10**6, 10**7)]
+    assert lams[0] < lams[1] < lams[2]
+
+
+def test_limit_latency_satisfies_equation():
+    W, p = 10**7, 64
+    lam = analysis.theoretical_limit_latency(W, p)
+    lhs = 3.8 * lam * np.log2(W / lam)
+    assert abs(lhs - 0.1 * W / p) / (0.1 * W / p) < 1e-6
+
+
+def test_paper_linear_law_shape():
+    """Paper §4.2: W/p ≈ 470·λ_limit — check the ratio is O(500), near-linear."""
+    ratios = []
+    for W, p in [(10**6, 32), (10**7, 64), (10**8, 256)]:
+        lam = analysis.theoretical_limit_latency(W, p)
+        ratios.append((W / p) / lam)
+    r = np.asarray(ratios)
+    assert (r > 200).all() and (r < 1200).all()
+    # near-linear: ratios within 2x of each other across 3 decades
+    assert r.max() / r.min() < 2.5
+
+
+def test_experimental_limit_latency():
+    W, p = 10**6, 32
+    data = {10: [W / p * 1.01] * 5, 100: [W / p * 1.05] * 5, 500: [W / p * 1.5] * 5}
+    assert analysis.experimental_limit_latency(data, W, p) == 100
+
+
+def test_summarize():
+    s = analysis.summarize(np.arange(101, dtype=np.float64))
+    assert s["median"] == 50 and s["q1"] == 25 and s["q3"] == 75 and s["n"] == 101

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import divisible as dv
+from repro.core import topology as T
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rms_norm
+from repro.kernels.ws_sim import ws_sim_pallas
+
+
+@pytest.mark.parametrize("B,Sq,H,KV,hd,dtype,causal,win", [
+    (2, 128, 4, 2, 64, jnp.float32, True, 0),
+    (1, 256, 4, 4, 32, jnp.float32, True, 64),
+    (2, 100, 2, 1, 16, jnp.float32, True, 0),     # non-divisible seq (padding)
+    (1, 64, 8, 2, 128, jnp.float32, False, 0),
+    (2, 128, 4, 2, 64, jnp.bfloat16, True, 0),
+    (1, 192, 6, 3, 32, jnp.bfloat16, True, 32),
+])
+def test_flash_attention_vs_ref(B, Sq, H, KV, hd, dtype, causal, win):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + H), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sq, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sq, KV, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=64, block_kv=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,Smax,kv_len,H,KV,hd,win,dtype", [
+    (2, 256, 200, 4, 2, 64, 0, jnp.float32),
+    (1, 512, 512, 8, 8, 32, 0, jnp.float32),
+    (2, 256, 100, 4, 1, 64, 64, jnp.float32),     # sliding window
+    (1, 384, 300, 4, 2, 128, 0, jnp.bfloat16),
+])
+def test_flash_decode_vs_ref(B, Smax, kv_len, H, KV, hd, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(Smax + kv_len), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, Smax, KV, hd), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, Smax, KV, hd), jnp.float32).astype(dtype)
+    out = flash_decode(q, kc, vc, kv_len, window=win, block_kv=128,
+                       interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, kv_len, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("R,D,dtype", [
+    (64, 256, jnp.float32), (100, 512, jnp.float32),   # padding path
+    (128, 1024, jnp.bfloat16), (1, 128, jnp.float32),
+])
+def test_rmsnorm_vs_ref(R, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(R + D), 2)
+    x = (jax.random.normal(ks[0], (R, D), jnp.float32) * 3).astype(dtype)
+    s = jax.random.normal(ks[1], (D,), jnp.float32).astype(dtype)
+    out = rms_norm(x, s, block_rows=32, interpret=True)
+    expect = ref.rms_norm_ref(x, s)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("p,W,lam,mwt", [
+    (4, 1000, 3, False), (8, 5000, 25, True), (16, 20000, 7, False),
+])
+def test_ws_sim_kernel_vs_engine(p, W, lam, mwt):
+    """Kernel must be BIT-exact vs the (oracle-validated) engine."""
+    topo = T.one_cluster(p, lam)
+    cfg = dv.EngineConfig(topology=topo, mwt=mwt, max_events=1 << 18)
+    seeds = np.arange(8, dtype=np.uint32) + 1
+    scn = dv.batch_scenarios(W, seeds, lam=lam)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    expect = ref.ws_sim_ref(cfg, scn)
+    for field in ("makespan", "n_events", "n_requests", "n_success", "n_fail",
+                  "total_idle", "startup_end", "executed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(expect, field)),
+            err_msg=field)
+    assert not np.asarray(got.overflow).any()
+
+
+def test_ws_sim_kernel_two_clusters():
+    topo = T.two_clusters(6, 50).with_strategy(T.LOCAL_FIRST, remote_prob=0.3)
+    cfg = dv.EngineConfig(topology=topo, mwt=False, max_events=1 << 18)
+    scn = dv.batch_scenarios(4000, np.arange(4, dtype=np.uint32) + 9,
+                             lam_local=1, lam_remote=50, remote_prob=0.3)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    expect = ref.ws_sim_ref(cfg, scn)
+    np.testing.assert_array_equal(np.asarray(got.makespan),
+                                  np.asarray(expect.makespan))
+    np.testing.assert_array_equal(np.asarray(got.executed),
+                                  np.asarray(expect.executed))

@@ -1,0 +1,123 @@
+"""Launch layer: mesh helpers, sharding rules, cell planning on a small mesh,
+HLO analysis utilities. (The production 16x16 / 2x16x16 lower+compile runs
+live in the dry-run sweep — artifacts/dryrun — since they need 512 host
+devices; here we validate the same code paths on tiny meshes.)"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis as ha
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, make_test_mesh
+from repro.launch.steps import lower_cell, plan_cell
+from repro.models import build_model
+
+REDUCED = dict(repeats=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+               d_ff=128, vocab_size=512)
+
+
+def test_param_specs_rules():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = get_config("mixtral-8x7b")
+    model = build_model(cfg)
+    ab = model.abstract_params()
+    sh = shd.shard_params(ab, mesh)
+    flat = {("/".join(str(getattr(k, "key", k)) for k in p)): s.spec
+            for p, s in jax.tree_util.tree_flatten_with_path(sh)[0]}
+    assert flat["tok_embed"] == P("model", "data")
+    assert flat["layers/slot0/attn/wq"] == P(None, "data", "model")
+    assert flat["layers/slot0/attn/wo"] == P(None, "model", "data")
+    # mixtral has 8 experts; 8 % |data| is guarded at spec-build time per mesh
+    assert flat["layers/slot0/ffn/w_gate"][3] == "model"
+    assert flat["layers/slot0/norm1"] == P(None, None)  # (repeats, D) stacked
+
+
+def test_divisibility_guard_replicates():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    # 5 doesn't divide anything > 1; on a 1x1 mesh everything divides
+    spec = shd._guard(("data", "model"), (5, 7), mesh)
+    assert spec == P("data", "model")
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_plan_and_lower_cell_tiny_mesh(kind):
+    shape_name = {"train": "train_4k", "prefill": "prefill_32k",
+                  "decode": "decode_32k"}[kind]
+    import dataclasses
+    from repro.configs import base as cfgbase
+    shape = SHAPES[shape_name]
+    small = dataclasses.replace(shape, seq_len=64, global_batch=2)
+    cfgbase.SHAPES["_tmp"] = small
+    try:
+        mesh = make_test_mesh((1, 1), ("data", "model"))
+        plan = plan_cell("qwen3-1.7b", "_tmp", mesh, cfg_overrides=REDUCED)
+        with jax.set_mesh(mesh):
+            lowered = lower_cell(plan)
+            compiled = lowered.compile()
+        assert compiled.memory_analysis() is not None
+    finally:
+        del cfgbase.SHAPES["_tmp"]
+
+
+def test_hlo_cost_counts_while_trips():
+    """hlo_cost must multiply while-body dot flops by the trip count."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.ones((32, 32))
+    w = jnp.ones((32, 32))
+    compiled = jax.jit(f).lower(x, w).compile()
+    flops, _ = ha.hlo_cost(compiled.as_text(), default_trip=7)
+    expect = 7 * 2 * 32 * 32 * 32
+    assert flops >= expect * 0.9, (flops, expect)
+    assert flops <= expect * 3.0
+
+
+def test_collective_parser_on_synthetic_hlo():
+    text = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ag = f32[16,16]{1,0} all-reduce(%p), replica_groups={}
+  ROOT %r = f32[16,16]{1,0} copy(%ag)
+}
+"""
+    stats = ha.collective_bytes(text)
+    assert stats.per_device_bytes == 16 * 16 * 4
+    assert stats.by_kind == {"all-reduce": 16 * 16 * 4.0}
+
+
+def test_attention_score_adjustment_shapes():
+    cfg = get_config("command-r-35b")
+    b = ha.attention_score_hbm_bytes(cfg, SHAPES["train_4k"], 256)
+    assert b > 0
+    # sliding window caps the kv extent
+    mix = get_config("mixtral-8x7b")
+    bm = ha.attention_score_hbm_bytes(mix, SHAPES["prefill_32k"], 256)
+    full_area = 32 * 32 * 32768 * 32768
+    swa_area = 32 * 32 * 32768 * 4096
+    assert bm < ha.attention_score_hbm_bytes(
+        get_config("phi3-mini-3.8b"), SHAPES["prefill_32k"], 256)
+    assert bm == pytest.approx(2 * 2 * 4 * swa_area * 32 / 256)
+
+
+def test_dp_axes():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    assert dp_axes(mesh) == ("data",)
+
+
+def test_model_flops_counts_moe_active_only():
+    dense = ha.model_flops_estimate(get_config("qwen3-1.7b"),
+                                    SHAPES["train_4k"])
+    moe_cfg = get_config("phi3.5-moe-42b-a6.6b")
+    moe = ha.model_flops_estimate(moe_cfg, SHAPES["train_4k"])
+    n_total = build_model(moe_cfg).param_count()
+    # active share must be well below the 42B total x 6 x tokens
+    assert moe < 6 * n_total * 256 * 4096 * 0.5

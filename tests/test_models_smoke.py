@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned arch is instantiated at a REDUCED config of the same family and
+runs: (1) forward — shapes + finite; (2) one train step — loss decreases or at
+least stays finite, grads finite; (3) decode parity — sequential single-token
+decode reproduces the forward logits at the last position (validates KV/SSM
+caches against the chunked training path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model
+
+ARCHS = list_archs()
+B, S = 2, 32
+
+
+def _batch(cfg, key=0):
+    rng = np.random.default_rng(key)
+    tokens = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    labels = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    if cfg.vision_prefix_len:
+        batch["vis_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_prefix_len, cfg.d_model)) * 0.02,
+            jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq_len, cfg.d_model)) * 0.02,
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build all reduced models + params once."""
+    out = {}
+    for name in ARCHS:
+        cfg = get_config(name).reduced()
+        m = build_model(cfg)
+        params = m.init_params(jax.random.PRNGKey(hash(name) % 2**31))
+        out[name] = (cfg, m, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(built, name):
+    cfg, m, params = built[name]
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: m.forward(p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{name}: non-finite aux"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step(built, name):
+    cfg, m, params = built[name]
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        (loss, met), grads = jax.value_and_grad(
+            lambda q: m.loss_fn(q, b), has_aux=True)(p)
+        new_p = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - 0.1 * g.astype(jnp.float32)).astype(w.dtype),
+            p, grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_p, loss, gnorm
+
+    p1, loss0, gnorm = step(params, batch)
+    assert bool(jnp.isfinite(loss0)), f"{name}: loss not finite"
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0, f"{name}: bad grads"
+    _, loss1, _ = step(p1, batch)
+    assert bool(jnp.isfinite(loss1))
+    assert float(loss1) < float(loss0) + 1.0  # no blow-up
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(built, name):
+    """Sequential decode must reproduce forward logits at the last position.
+
+    MoE archs use a large capacity factor here: with tight capacity, batched
+    routing (forward) and per-token routing (decode) legitimately drop/steal
+    different tokens — parity only holds when nothing overflows.
+    """
+    import dataclasses
+    cfg, _m, _params = built[name]
+    # f32 params: checks *semantic* equality of the two paths (bf16 only adds
+    # accumulation-order noise that grows with depth, verified separately).
+    overrides = {"param_dtype": "float32"}
+    if cfg.n_experts:
+        overrides.update(capacity_factor=64.0, ws_rebalance=False)
+    cfg = dataclasses.replace(cfg, **overrides)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(hash(name) % 2**31))
+    batch = _batch(cfg)
+    fwd_logits, _ = jax.jit(lambda p, b: m.forward(p, b))(params, batch)
+    cache, dec_logits = m.prefill(params, batch,
+                                  max_seq=S + cfg.vision_prefix_len,
+                                  dtype=jnp.float32)
+    a = fwd_logits[:, -1].astype(jnp.float32)
+    bb = dec_logits[:, 0].astype(jnp.float32)
+    diff = float(jnp.abs(a - bb).max())
+    tol = 1e-3 * float(jnp.abs(a).max()) + 1e-3
+    assert diff < tol, f"{name}: decode/forward diverge: {diff} vs tol {tol}"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_abstract_params_match_real(built, name):
+    cfg, m, params = built[name]
+    ab = m.abstract_params()
+    real_tree = jax.tree.map(lambda x: (x.shape, str(x.dtype)), params)
+    ab_tree = jax.tree.map(lambda x: (x.shape, str(x.dtype)), ab)
+    assert real_tree == ab_tree
+
+
+def test_full_configs_param_counts():
+    """Full (non-reduced) configs report plausible parameter counts."""
+    expect_b = {
+        "qwen3-1.7b": (1.2, 2.6), "deepseek-67b": (60, 72),
+        "phi3-mini-3.8b": (3.3, 4.4), "command-r-35b": (30, 40),
+        "phi3.5-moe-42b-a6.6b": (38, 46), "mixtral-8x7b": (43, 50),
+        "xlstm-350m": (0.25, 0.5), "whisper-large-v3": (1.3, 2.2),
+        "jamba-v0.1-52b": (48, 56), "internvl2-76b": (66, 80),
+    }
+    for name, (lo, hi) in expect_b.items():
+        n = build_model(get_config(name)).param_count() / 1e9
+        assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_long_context_skip_flags():
+    """long_500k runs exactly for the sub-quadratic archs (DESIGN.md §6)."""
+    from repro.configs import SHAPES, cell_is_runnable
+    runnable = {n for n in ARCHS
+                if cell_is_runnable(get_config(n), SHAPES["long_500k"])[0]}
+    assert runnable == {"mixtral-8x7b", "xlstm-350m", "jamba-v0.1-52b"}

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis
+from repro.core import divisible as dv
+from repro.core import topology as T
+from repro.core import dag_gen as gen
+from repro.optim import compression as comp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(p=st.integers(2, 12), W=st.integers(1, 5000), lam=st.integers(1, 60),
+       seed=st.integers(0, 2**31 - 1), mwt=st.booleans())
+def test_ws_invariants(p, W, lam, seed, mwt):
+    """For ANY scenario: work conserved, makespan >= ceil(W/p), makespan <=
+    bound, request accounting consistent."""
+    topo = T.one_cluster(p, lam)
+    cfg = dv.EngineConfig(topology=topo, mwt=mwt,
+                          max_events=dv.default_max_events(W, p, lam))
+    r = dv.simulate(cfg, dv.make_scenario(W, seed, lam=lam))
+    assert not bool(r.overflow)
+    ex = np.asarray(r.executed)
+    assert ex.sum() == W
+    assert (ex >= 0).all()
+    assert int(r.makespan) >= int(np.ceil(W / p))
+    assert int(r.makespan) <= analysis.makespan_bound(max(W, 2), p, lam) + W
+    assert int(r.n_requests) == int(r.n_success) + int(r.n_fail)
+
+
+@settings(**SETTINGS)
+@given(p=st.integers(2, 8), W=st.integers(10, 2000), lam=st.integers(1, 40),
+       seed=st.integers(0, 1000))
+def test_ws_engine_matches_oracle(p, W, lam, seed):
+    """Bit-exact engine/oracle agreement on random scenarios."""
+    from repro.core.oracle import simulate_oracle
+    topo = T.one_cluster(p, lam)
+    cfg = dv.EngineConfig(topology=topo,
+                          max_events=dv.default_max_events(W, p, lam))
+    r = dv.simulate(cfg, dv.make_scenario(W, seed, lam=lam))
+    o = simulate_oracle(topo, W, seed)
+    assert int(r.makespan) == o.makespan
+    assert int(r.n_requests) == o.n_requests
+    assert np.array_equal(np.asarray(r.executed), o.executed.astype(np.int32))
+
+
+@settings(**SETTINGS)
+@given(depth=st.integers(2, 7), p=st.integers(1, 6), lam=st.integers(1, 10),
+       seed=st.integers(0, 100))
+def test_dag_bounds(depth, p, lam, seed):
+    """Cmax in [max(T1/p, D), T1] for random fork-join DAGs."""
+    from repro.core import dag as dg
+    dagf = gen.fork_join(depth)
+    topo = T.one_cluster(p, lam)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, max_events=1 << 20)
+    r = dg.simulate_dag(cfg, dv.make_scenario(0, seed, lam=lam))
+    assert not bool(r.overflow)
+    t1, d = dagf.total_work, dagf.critical_path()
+    # with explicit latency Cmax can exceed T1 (idle processors wait 2λ per
+    # steal round-trip along the critical path) — the WS-with-latency bound
+    assert max(int(np.ceil(t1 / p)), d) <= int(r.makespan)
+    assert int(r.makespan) <= t1 + 8 * lam * (d + 2)
+    assert int(r.n_completed) == dagf.n
+
+
+@settings(**SETTINGS)
+@given(W=st.integers(16, 5000), seed=st.integers(0, 100),
+       alpha=st.integers(0, 4), bnum=st.integers(0, 8))
+def test_adaptive_conservation(W, seed, alpha, bnum):
+    """Executed work == W + merge work; created == completed."""
+    from repro.core import adaptive as ad
+    topo = T.one_cluster(5, 3)
+    cfg = ad.AdaptiveEngineConfig(topology=topo, merge_alpha=alpha,
+                                  merge_beta_num=bnum, pool_cap=1 << 14,
+                                  max_events=1 << 20)
+    r = ad.simulate_adaptive(cfg, dv.make_scenario(W, seed, lam=3))
+    assert not bool(r.overflow)
+    assert int(np.asarray(r.executed).sum()) == W + int(r.total_merge_work)
+    assert int(r.n_created) == int(r.n_completed) == 1 + 2 * int(r.n_splits)
+
+
+@settings(**SETTINGS)
+@given(vals=st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                     max_size=200))
+def test_compression_error_bound(vals):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise, scale = max|x|/127."""
+    import jax.numpy as jnp
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q, s = comp.compress(x)
+    err = np.abs(np.asarray(comp.decompress(q, s)) - np.asarray(x))
+    assert (err <= float(s) * 0.5 + 1e-5).all()
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 64), dur=st.integers(1, 9))
+def test_dag_generators_single_source_acyclic(n, dur):
+    dagf = gen.merge_sort(max(n * 16, 32), cutoff=16, split_dur=dur)
+    assert len(dagf.sources) == 1
+    dagf.critical_path()          # raises on cycles
+    h = dagf.heights()
+    assert h[dagf.sources[0]] == h.max()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), i=st.integers(0, 512))
+def test_prng_twins(seed, i):
+    from repro.core.topology import (np_seed_state, np_xorshift32, seed_state,
+                                     xorshift32)
+    import jax.numpy as jnp
+    a = seed_state(seed, i)
+    b = np_seed_state(seed, i)
+    assert int(a) == int(b) != 0
+    assert int(xorshift32(jnp.uint32(int(b)))) == int(np_xorshift32(b))
+
+
+@settings(**SETTINGS)
+@given(q=st.lists(st.integers(0, 100), min_size=2, max_size=16))
+def test_rebalance_conserves_items(q):
+    from repro.sched.ws_scheduler import straggler_rebalance
+    topo = T.one_cluster(len(q), 2)
+    before = sum(q)
+    moves = straggler_rebalance([float(x) for x in q], topo)
+    q2 = list(q)
+    for v, t, n in moves:
+        assert n >= 1
+        q2[v] -= n
+        q2[t] += n
+    assert sum(q2) == before
+    assert all(x >= 0 for x in q2)

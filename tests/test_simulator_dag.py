@@ -1,0 +1,164 @@
+"""DAG + adaptive task-model engines (paper §2.1.2, §2.1.3)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import dag as dg
+from repro.core import dag_gen as gen
+from repro.core import adaptive as ad
+from repro.core import divisible as dv
+from repro.core.oracle import simulate_dag_oracle, simulate_adaptive_oracle
+
+
+def _run_dag(dagf, topo, seed, mwt=False, lifo=True, theta=0):
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, mwt=mwt,
+                             owner_lifo=lifo, max_events=1 << 20)
+    scn = dv.make_scenario(0, seed, lam_local=topo.lam_local,
+                           lam_remote=topo.lam_remote, theta_static=theta)
+    r = dg.simulate_dag(cfg, scn)
+    o = simulate_dag_oracle(topo, dagf, seed, mwt=mwt, owner_lifo=lifo,
+                            theta_static=theta)
+    return r, o
+
+
+@pytest.mark.parametrize("mk,topo_args,lifo", [
+    (lambda: gen.binary_tree(7), (4, 3), True),
+    (lambda: gen.fork_join(6), (8, 10), True),
+    (lambda: gen.merge_sort(1000, 32), (6, 30), True),
+    (lambda: gen.random_layered(8, 16, 0.3, seed=5), (5, 2), False),
+    (lambda: gen.chain(40), (4, 5), True),
+])
+def test_dag_oracle_match(mk, topo_args, lifo):
+    dagf = mk()
+    topo = T.one_cluster(*topo_args)
+    r, o = _run_dag(dagf, topo, seed=11, lifo=lifo)
+    assert not bool(r.overflow)
+    assert int(r.makespan) == o["makespan"]
+    assert int(r.n_requests) == o["n_requests"]
+    assert int(r.n_success) == o["n_success"]
+    assert int(r.total_idle) == o["total_idle"]
+    assert np.array_equal(np.asarray(r.executed), o["executed"].astype(np.int32))
+
+
+def test_dag_completes_all_tasks():
+    dagf = gen.merge_sort(2000, 64)
+    topo = T.one_cluster(8, 4)
+    r, _ = _run_dag(dagf, topo, seed=2)
+    assert int(r.n_completed) == dagf.n
+    assert int(np.asarray(r.executed).sum()) == dagf.total_work
+    assert int(np.asarray(r.tasks_run).sum()) == dagf.n
+
+
+def test_dag_makespan_bounds():
+    """max(T1/p, D) <= Cmax <= T1 (fundamental WS bounds)."""
+    dagf = gen.random_layered(12, 24, 0.25, seed=9)
+    topo = T.one_cluster(8, 2)
+    r, _ = _run_dag(dagf, topo, seed=3)
+    t1 = dagf.total_work
+    d = dagf.critical_path()
+    ms = int(r.makespan)
+    assert ms >= max(int(np.ceil(t1 / 8)), d)
+    assert ms <= t1
+
+
+def test_dag_single_proc_serial():
+    dagf = gen.fork_join(5)
+    topo = T.one_cluster(1, 5)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, max_events=1 << 16)
+    r = dg.simulate_dag(cfg, dv.make_scenario(0, 1, lam=5))
+    assert int(r.makespan) == dagf.total_work
+
+
+def test_dag_chain_is_critical_path_bound():
+    """A chain admits no parallelism: Cmax == total work on any p."""
+    dagf = gen.chain(30)
+    topo = T.one_cluster(6, 2)
+    r, _ = _run_dag(dagf, topo, seed=4)
+    assert int(r.makespan) == 30
+
+
+def test_dag_two_cluster_strategies_match_oracle():
+    dagf = gen.merge_sort(800, 16)
+    for strat in (T.UNIFORM, T.LOCAL_FIRST, T.ROUND_ROBIN):
+        topo = T.two_clusters(6, 40).with_strategy(strat)
+        r, o = _run_dag(dagf, topo, seed=6)
+        assert int(r.makespan) == o["makespan"]
+
+
+def test_dag_heights_and_json_roundtrip():
+    dagf = gen.fork_join(4)
+    h = dagf.heights()
+    assert h[0] == h.max()  # source has the largest height
+    js = gen.to_json(dagf)
+    back = gen.from_json(js)
+    assert back.n == dagf.n
+    assert np.array_equal(back.dur, dagf.dur)
+    assert np.array_equal(back.child_ptr, dagf.child_ptr)
+    assert np.array_equal(back.child_idx, dagf.child_idx)
+
+
+def test_dag_owner_fifo_vs_lifo_differ():
+    """The two deque disciplines generally produce different schedules."""
+    dagf = gen.random_layered(10, 10, 0.4, seed=1)
+    topo = T.one_cluster(4, 6)
+    r1, _ = _run_dag(dagf, topo, seed=8, lifo=True)
+    r2, _ = _run_dag(dagf, topo, seed=8, lifo=False)
+    assert int(r1.n_completed) == int(r2.n_completed) == dagf.n
+    # makespans may coincide by luck; executed distribution usually differs
+    same = np.array_equal(np.asarray(r1.executed), np.asarray(r2.executed))
+    assert not same or int(r1.makespan) == int(r2.makespan)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive tasks
+# ---------------------------------------------------------------------------
+
+def _run_adaptive(W, topo, seed, mwt=False, alpha=1, bnum=0, bden=16):
+    cfg = ad.AdaptiveEngineConfig(topology=topo, mwt=mwt, merge_alpha=alpha,
+                                  merge_beta_num=bnum, merge_beta_den=bden,
+                                  pool_cap=8192, max_events=1 << 20)
+    scn = dv.make_scenario(W, seed, lam_local=topo.lam_local,
+                           lam_remote=topo.lam_remote)
+    r = ad.simulate_adaptive(cfg, scn)
+    o = simulate_adaptive_oracle(topo, W, seed, mwt=mwt, merge_alpha=alpha,
+                                 merge_beta_num=bnum, merge_beta_den=bden)
+    return r, o
+
+
+@pytest.mark.parametrize("W,lam,mwt,alpha,bnum", [
+    (1000, 5, False, 1, 0), (5000, 20, True, 2, 1), (20000, 7, False, 1, 4),
+    (300, 1, False, 3, 8),
+])
+def test_adaptive_oracle_match(W, lam, mwt, alpha, bnum):
+    topo = T.one_cluster(6, lam)
+    r, o = _run_adaptive(W, topo, seed=9, mwt=mwt, alpha=alpha, bnum=bnum)
+    assert not bool(r.overflow)
+    assert int(r.makespan) == o["makespan"]
+    assert int(r.n_splits) == o["n_splits"]
+    assert int(r.n_created) == o["n_created"]
+    assert int(r.total_merge_work) == o["total_merge_work"]
+    assert np.array_equal(np.asarray(r.executed), o["executed"].astype(np.int32))
+
+
+def test_adaptive_work_conservation():
+    """Σ executed == W + Σ merge durations (task-engine invariant)."""
+    topo = T.one_cluster(8, 10)
+    r, _ = _run_adaptive(50_000, topo, seed=13, alpha=2, bnum=1)
+    assert int(np.asarray(r.executed).sum()) == 50_000 + int(r.total_merge_work)
+    assert int(r.n_created) == 1 + 2 * int(r.n_splits)
+    assert int(r.n_completed) == int(r.n_created)
+
+
+def test_adaptive_merge_cost_slows_makespan():
+    topo = T.one_cluster(8, 5)
+    r_cheap, _ = _run_adaptive(20_000, topo, seed=3, alpha=1, bnum=0)
+    r_costly, _ = _run_adaptive(20_000, topo, seed=3, alpha=1, bnum=8, bden=16)
+    assert int(r_costly.makespan) >= int(r_cheap.makespan)
+
+
+def test_adaptive_single_proc():
+    topo = T.one_cluster(1, 5)
+    cfg = ad.AdaptiveEngineConfig(topology=topo, max_events=1 << 10)
+    r = ad.simulate_adaptive(cfg, dv.make_scenario(999, 1, lam=5))
+    assert int(r.makespan) == 999
+    assert int(r.n_splits) == 0

@@ -1,0 +1,186 @@
+"""Divisible-load WS engine: oracle equivalence + invariants (paper §3, §4)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import divisible as dv
+from repro.core import analysis
+from repro.core.gantt import decode_trace, ascii_gantt, to_paje, to_json
+from repro.core.oracle import simulate_oracle
+
+
+def _run_both(topo, W, seed, mwt=False, ts=0, tc=0, rp=0.25):
+    cfg = dv.EngineConfig(topology=topo, mwt=mwt, max_events=1 << 20)
+    scn = dv.make_scenario(W, seed, lam_local=topo.lam_local,
+                           lam_remote=topo.lam_remote,
+                           theta_static=ts, theta_comm=tc, remote_prob=rp)
+    r = dv.simulate(cfg, scn)
+    o = simulate_oracle(topo, W, seed, theta_static=ts, theta_comm=tc,
+                        mwt=mwt, remote_prob=rp)
+    return r, o
+
+
+def _assert_match(r, o):
+    assert not bool(r.overflow) and not o.overflow
+    assert int(r.makespan) == o.makespan
+    assert int(r.n_events) == o.n_events
+    assert int(r.n_requests) == o.n_requests
+    assert int(r.n_success) == o.n_success
+    assert int(r.n_fail) == o.n_fail
+    assert int(r.total_idle) == o.total_idle
+    assert int(r.startup_end) == o.startup_end
+    assert np.array_equal(np.asarray(r.executed), o.executed.astype(np.int32))
+
+
+@pytest.mark.parametrize("p,W,lam,mwt", [
+    (2, 100, 1, False), (4, 523, 7, False), (8, 1000, 5, True),
+    (13, 20000, 50, False), (32, 10000, 3, True),
+])
+def test_oracle_match_one_cluster(p, W, lam, mwt):
+    topo = T.one_cluster(p, lam)
+    r, o = _run_both(topo, W, seed=p + W + lam, mwt=mwt)
+    _assert_match(r, o)
+
+
+@pytest.mark.parametrize("ts,tc", [(0, 0), (5, 0), (0, 2), (3, 1)])
+def test_oracle_match_threshold(ts, tc):
+    topo = T.one_cluster(8, 11)
+    r, o = _run_both(topo, 4096, seed=9, ts=ts, tc=tc)
+    _assert_match(r, o)
+
+
+@pytest.mark.parametrize("strat,rp", [
+    (T.UNIFORM, 0.25), (T.LOCAL_FIRST, 0.1), (T.LOCAL_FIRST, 0.6),
+    (T.ROUND_ROBIN, 0.25),
+])
+def test_oracle_match_two_clusters(strat, rp):
+    topo = T.two_clusters(10, 60).with_strategy(strat, remote_prob=rp)
+    r, o = _run_both(topo, 7000, seed=3, rp=rp)
+    _assert_match(r, o)
+
+
+@pytest.mark.parametrize("inter", ["complete", "ring", "line", "star"])
+def test_oracle_match_multicluster(inter):
+    topo = T.multi_cluster(4, 3, 40, inter=inter)
+    r, o = _run_both(topo, 6000, seed=5)
+    _assert_match(r, o)
+
+
+def test_single_processor():
+    topo = T.one_cluster(1, 5)
+    cfg = dv.EngineConfig(topology=topo, max_events=64)
+    r = dv.simulate(cfg, dv.make_scenario(777, 1, lam=5))
+    assert int(r.makespan) == 777
+    assert int(r.n_requests) == 0
+
+
+def test_zero_work():
+    topo = T.one_cluster(4, 5)
+    cfg = dv.EngineConfig(topology=topo, max_events=64)
+    r = dv.simulate(cfg, dv.make_scenario(0, 1, lam=5))
+    assert int(r.makespan) == 0
+
+
+def test_determinism():
+    topo = T.one_cluster(16, 20)
+    cfg = dv.EngineConfig(topology=topo, max_events=1 << 18)
+    a = dv.simulate(cfg, dv.make_scenario(50_000, 11, lam=20))
+    b = dv.simulate(cfg, dv.make_scenario(50_000, 11, lam=20))
+    assert int(a.makespan) == int(b.makespan)
+    assert np.array_equal(np.asarray(a.executed), np.asarray(b.executed))
+
+
+def test_work_conservation_batch():
+    """Σ executed == W for every scenario in a batch (task-engine invariant)."""
+    topo = T.one_cluster(12, 9)
+    cfg = dv.EngineConfig(topology=topo, max_events=1 << 18)
+    scn = dv.batch_scenarios(12345, np.arange(32, dtype=np.uint32) + 1, lam=9)
+    r = dv.simulate_batch(cfg, scn)
+    ex = np.asarray(r.executed)
+    assert not np.asarray(r.overflow).any()
+    assert (ex.sum(axis=1) == 12345).all()
+    assert (ex >= 0).all()
+    assert (np.asarray(r.makespan) >= int(np.ceil(12345 / 12))).all()
+
+
+def test_makespan_below_theoretical_bound():
+    """Simulated Cmax ≤ theoretical bound (the bound is 4-5.5x loose)."""
+    topo = T.one_cluster(32, 50)
+    cfg = dv.EngineConfig(topology=topo, max_events=1 << 20)
+    scn = dv.batch_scenarios(10**6, np.arange(16, dtype=np.uint32) + 1, lam=50)
+    r = dv.simulate_batch(cfg, scn)
+    bound = analysis.makespan_bound(10**6, 32, 50)
+    assert (np.asarray(r.makespan) <= bound).all()
+
+
+def test_overhead_ratio_in_paper_band():
+    """Paper Fig 10: bound/observed overhead ratio ≈ 4-5.5."""
+    topo = T.one_cluster(64, 100)
+    cfg = dv.EngineConfig(topology=topo,
+                          max_events=dv.default_max_events(10**7, 64, 100))
+    scn = dv.batch_scenarios(10**7, np.arange(32, dtype=np.uint32) + 1, lam=100)
+    r = dv.simulate_batch(cfg, scn)
+    ratios = analysis.overhead_ratio(np.asarray(r.makespan), 10**7, 64, 100)
+    med = float(np.median(ratios))
+    assert 3.0 < med < 7.0, med  # loose CI band around the paper's 4-5.5
+
+
+def test_mwt_speeds_up_startup():
+    """Paper Fig 14: MWT shortens the startup phase for most runs."""
+    topo = T.one_cluster(32, 262)
+    seeds = np.arange(24, dtype=np.uint32) + 1
+    outs = {}
+    for mwt in (False, True):
+        cfg = dv.EngineConfig(topology=topo, mwt=mwt, max_events=1 << 20)
+        scn = dv.batch_scenarios(10**6, seeds, lam=262)
+        outs[mwt] = np.asarray(dv.simulate_batch(cfg, scn).startup_end)
+    assert (outs[True] > 0).all() and (outs[False] > 0).all()
+    # MWT startup is shorter at least in the median (paper: 75% of runs)
+    assert np.median(outs[True]) <= np.median(outs[False])
+
+
+def test_threshold_reduces_steals():
+    topo = T.one_cluster(16, 30)
+    seeds = np.arange(16, dtype=np.uint32) + 1
+    succ = {}
+    for theta in (0, 64):
+        cfg = dv.EngineConfig(topology=topo, max_events=1 << 18)
+        scn = dv.batch_scenarios(20000, seeds, lam=30, theta_static=theta)
+        succ[theta] = np.asarray(dv.simulate_batch(cfg, scn).n_success)
+    assert succ[64].mean() <= succ[0].mean()
+
+
+def test_trace_gantt_roundtrip():
+    topo = T.one_cluster(6, 8)
+    cfg = dv.EngineConfig(topology=topo, max_events=1 << 16,
+                          log_trace=True, max_trace=4096)
+    W = 3000
+    r = dv.simulate(cfg, dv.make_scenario(W, 21, lam=8))
+    dec = decode_trace(np.asarray(r.trace), int(r.n_trace), 6, W, int(r.makespan))
+    ex = np.asarray(r.executed)
+    for proc, ivals in dec["runs"].items():
+        # run intervals are disjoint, ordered, and sum to the executed work
+        tot = 0
+        last = -1
+        for t0, t1 in sorted(ivals):
+            assert t0 >= last
+            tot += t1 - t0
+            last = t1
+        assert tot == ex[proc], (proc, tot, ex[proc])
+    chart = ascii_gantt(dec["runs"], int(r.makespan))
+    assert "P0" in chart
+    paje = to_paje(dec["runs"], int(r.makespan))
+    assert "PajeSetState" in paje
+    js = to_json(r, 6, W)
+    assert '"makespan"' in js
+
+
+def test_grid_runner():
+    from repro.core.sweep import run_grid
+    topo = T.one_cluster(8, 1)
+    g = run_grid(topo, W_list=[1000, 5000], lam_list=[2, 10], reps=4)
+    assert len(g) == 2 * 2 * 4
+    assert not g.overflow.any()
+    assert (g.makespan >= g.W // 8).all()

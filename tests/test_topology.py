@@ -1,0 +1,78 @@
+"""Topology engine: builders, distance(), victim selection, PRNG twins."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+def test_one_cluster_distance():
+    topo = T.one_cluster(8, 42)
+    d = topo.dist
+    assert d.shape == (8, 8)
+    assert (np.diag(d) == 0).all()
+    off = d[~np.eye(8, dtype=bool)]
+    assert (off == 42).all()
+    assert topo.distance(1, 2) == 42
+    assert topo.distance(3, 3) == 0
+
+
+def test_two_clusters_distance():
+    topo = T.two_clusters(8, 100, lam_local=1)
+    assert topo.distance(0, 1) == 1
+    assert topo.distance(0, 4) == 100
+    assert topo.distance(7, 6) == 1
+    assert topo.n_clusters == 2
+
+
+@pytest.mark.parametrize("inter,expect_hops", [
+    ("complete", 1), ("ring", 2), ("line", 2), ("star", 2),
+])
+def test_multicluster_hops(inter, expect_hops):
+    topo = T.multi_cluster(5, 2, 10, inter=inter)
+    # clusters 1 and 3 (non-hub): complete->1 hop, ring->2, line->2, star->2
+    i, j = 2, 6  # proc 2 in cluster 1, proc 6 in cluster 3
+    assert topo.distance(i, j) == 10 * expect_hops
+
+
+def test_ring_wraps():
+    topo = T.multi_cluster(6, 1, 7, inter="ring")
+    assert topo.distance(0, 5) == 7          # 0 -> 5 is one hop backwards
+    assert topo.distance(0, 3) == 21         # opposite side: 3 hops
+
+
+def test_materialize_symmetry():
+    for topo in (T.one_cluster(6, 9), T.two_clusters(6, 50),
+                 T.multi_cluster(3, 2, 30, inter="line")):
+        d = topo.dist
+        assert (d == d.T).all()
+        assert (np.diag(d) == 0).all()
+
+
+def test_prng_twins_agree():
+    import jax.numpy as jnp
+    for seed in (0, 1, 12345, 2**31):
+        for i in (0, 1, 255):
+            a = T.seed_state(seed, i)
+            b = T.np_seed_state(seed, i)
+            assert int(a) == int(b)
+            x = T.xorshift32(jnp.uint32(int(b)))
+            y = T.np_xorshift32(b)
+            assert int(x) == int(y)
+
+
+def test_uniform_never_self_and_covers():
+    p = 7
+    rng = T.np_seed_state(3, 0)
+    seen = set()
+    for _ in range(500):
+        v, rng = T.np_uniform_other(rng, 3, p)
+        assert v != 3 and 0 <= v < p
+        seen.add(v)
+    assert seen == {0, 1, 2, 4, 5, 6}
+
+
+def test_tpu_fleet_maps_pods_to_clusters():
+    topo = T.tpu_fleet(n_pods=2, chips_per_pod=4, ici_delay=1, dcn_delay=40)
+    assert topo.p == 8
+    assert topo.distance(0, 1) == 1
+    assert topo.distance(0, 4) == 40
