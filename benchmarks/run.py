@@ -6,7 +6,9 @@ artifacts/bench/). Figures:
   fig10_overhead_ratio   paper §4.1: bound/simulated overhead, 4-5.5x
   fig11_accept_latency   paper §4.2: W/p ≈ 470·λ law
   fig12_mwt_swt          paper §4.3: MWT startup vs overall effect
-  sim_throughput         simulator speed: events/second (engine)
+  sim_throughput         simulator speed: events/second (divisible engine)
+  model_throughput       scenarios/sec + events/sec for ALL task models
+                         (divisible, dag, adaptive) through the unified core
   sched_planner          planner decision quality on a 2-pod fleet
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
@@ -201,6 +203,46 @@ def sim_throughput(reps: int):
          f"{ev / dt:,.0f} events/s over {reps} parallel sims (p={p})")
 
 
+def model_throughput(reps: int):
+    """Scenarios/sec and events/sec per task model through the unified
+    engine — the perf trajectory now covers more than the divisible hot
+    path (DESIGN.md §2)."""
+    from repro.core import engine as eng
+    from repro.core import dag_gen as gen
+    from repro.core.sweep import make_model
+
+    p = 32
+    topo = one_cluster(p, 10)
+    W = 200_000
+    models = {
+        "divisible": make_model(
+            "divisible", topology=topo,
+            max_events=dv.default_max_events(W, p, 10)),
+        "dag": make_model(
+            "dag", topology=topo, dag=gen.merge_sort(20_000, 64),
+            max_events=1 << 20),
+        "adaptive": make_model(
+            "adaptive", topology=topo, pool_cap=1 << 13,
+            max_events=dv.default_max_events(W, p, 10)),
+    }
+    rows = []
+    for name, model in models.items():
+        scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 1,
+                                  lam=10)
+        res = eng.simulate_batch(model, scn)          # compile + warm
+        res.makespan.block_until_ready()
+        t0 = time.time()
+        res = eng.simulate_batch(model, scn)
+        res.makespan.block_until_ready()
+        dt = time.time() - t0
+        ev = int(np.asarray(res.n_events).sum())
+        rows.append(dict(model=name, scn_per_s=reps / dt,
+                         events_per_s=ev / dt, us_per_scn=dt * 1e6 / reps))
+        _row(f"model_throughput_{name}", dt * 1e6 / reps,
+             f"{reps / dt:,.1f} scn/s; {ev / dt:,.0f} events/s (p={p})")
+    _write_csv("model_throughput", rows)
+
+
 def sched_planner(reps: int):
     from repro.sched.planner import plan_for_mesh
     t0 = time.time()
@@ -270,6 +312,7 @@ def main():
         "steal_threshold": lambda: steal_threshold(reps),
         "multicluster": lambda: multicluster(reps),
         "sim_throughput": lambda: sim_throughput(max(reps, 32)),
+        "model_throughput": lambda: model_throughput(max(reps, 32)),
         "sched_planner": lambda: sched_planner(reps),
         "roofline": lambda: roofline(reps),
     }

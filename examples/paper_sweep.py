@@ -11,7 +11,7 @@ benchmarks/ for the CSV versions used in EXPERIMENTS.md.
 """
 import numpy as np
 
-from repro.core import analysis, one_cluster
+from repro.core import analysis, engine as eng, make_model, one_cluster
 from repro.core import divisible as dv
 
 
@@ -22,11 +22,12 @@ def overhead_and_fit(reps=24):
         topo = one_cluster(p, 1)
         for W in (10**5, 10**6, 10**7):
             for lam in (2, 62, 262):
-                cfg = dv.EngineConfig(topology=topo,
-                                      max_events=dv.default_max_events(W, p, lam))
-                scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 1,
-                                         lam=lam)
-                res = dv.simulate_batch(cfg, scn)
+                model = make_model(
+                    "divisible", topology=topo,
+                    max_events=dv.default_max_events(W, p, lam))
+                scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 1,
+                                          lam=lam)
+                res = eng.simulate_batch(model, scn)
                 ms = np.asarray(res.makespan)
                 r = analysis.overhead_ratio(ms, W, p, lam)
                 c = analysis.fitted_constant(ms, W, p, lam)
@@ -48,11 +49,12 @@ def acceptable_latency(reps=16):
         by_lam = {}
         for lam in np.unique(np.linspace(max(lam_th * 0.4, 1), lam_th * 2.2,
                                          8).astype(int)):
-            cfg = dv.EngineConfig(topology=topo,
-                                  max_events=dv.default_max_events(W, p, int(lam)))
-            scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 3,
-                                     lam=int(lam))
-            by_lam[int(lam)] = np.asarray(dv.simulate_batch(cfg, scn).makespan)
+            model = make_model(
+                "divisible", topology=topo,
+                max_events=dv.default_max_events(W, p, int(lam)))
+            scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 3,
+                                      lam=int(lam))
+            by_lam[int(lam)] = np.asarray(eng.simulate_batch(model, scn).makespan)
         lam_exp = analysis.experimental_limit_latency(by_lam, W, p)
         print(f"  W=1e{int(np.log10(W))}: theoretical lam*={lam_th:7.1f} "
               f"experimental lam*={lam_exp:7.1f} "
@@ -66,11 +68,12 @@ def mwt_vs_swt(reps=24):
         topo = one_cluster(p, lam)
         out = {}
         for mwt in (False, True):
-            cfg = dv.EngineConfig(topology=topo, mwt=mwt,
-                                  max_events=dv.default_max_events(W, p, lam))
-            scn = dv.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 5,
-                                     lam=lam)
-            res = dv.simulate_batch(cfg, scn)
+            model = make_model(
+                "divisible", topology=topo, mwt=mwt,
+                max_events=dv.default_max_events(W, p, lam))
+            scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 5,
+                                      lam=lam)
+            res = eng.simulate_batch(model, scn)
             out[mwt] = (np.asarray(res.makespan), np.asarray(res.startup_end))
         ms_gain = np.median(out[False][0]) / np.median(out[True][0])
         su_gain = np.median(out[False][1]) / np.median(out[True][1])
@@ -79,7 +82,31 @@ def mwt_vs_swt(reps=24):
               f"(paper: startup up to 2x+, overall ~flat)")
 
 
+def all_task_models(reps=8):
+    """Beyond-paper: one sweep program per task model (§2.1.1-§2.1.3),
+    all through the unified event core + batching layer."""
+    from repro.core import dag_gen as gen
+    from repro.core.sweep import run_grid
+
+    print("\n=== Unified sweeps: divisible / dag / adaptive ===")
+    topo = one_cluster(8, 1)
+    g = run_grid(topo, W_list=[10**5], lam_list=[2, 62], reps=reps)
+    print(f"  divisible: {len(g)} cells, median makespan "
+          f"{float(np.median(g.makespan)):.0f}")
+    g = run_grid(topo, lam_list=[2, 62], reps=reps, task_model="dag",
+                 dag=gen.merge_sort(20_000, 64))
+    print(f"  dag:       {len(g)} cells, median makespan "
+          f"{float(np.median(g.makespan)):.0f} "
+          f"(tasks completed {int(g.extras['n_completed'][0])})")
+    g = run_grid(topo, W_list=[10**5], lam_list=[2, 62], reps=reps,
+                 task_model="adaptive", merge_alpha=2, merge_beta_num=1)
+    print(f"  adaptive:  {len(g)} cells, median makespan "
+          f"{float(np.median(g.makespan)):.0f} "
+          f"(median splits {float(np.median(g.extras['n_splits'])):.0f})")
+
+
 if __name__ == "__main__":
     overhead_and_fit()
     acceptable_latency()
     mwt_vs_swt()
+    all_task_models()

@@ -1,17 +1,21 @@
 """Core: the paper's Work-Stealing simulator as composable JAX modules.
 
-Engines (paper §3): event+processor engine (``divisible``, ``dag``,
-``adaptive``), task engine (task models inside each engine + ``dag_gen``),
-topology engine (``topology``), log engine (``gantt``), simulator engine
-(``sweep``), analysis layer (``analysis``).
+Engines (paper §3): unified event+processor engine (``engine``) with
+pluggable task engines (``divisible``, ``dag``, ``adaptive`` task models +
+``dag_gen``), topology engine (``topology``), log engine (``gantt``),
+simulator engine (``sweep``), analysis layer (``analysis``). See DESIGN.md.
 """
 from repro.core.topology import (  # noqa: F401
     Topology, one_cluster, two_clusters, multi_cluster, tpu_fleet,
     UNIFORM, LOCAL_FIRST, INV_DISTANCE, ROUND_ROBIN, strategy_name,
 )
+from repro.core import engine  # noqa: F401
+from repro.core.engine import TaskModel  # noqa: F401
 from repro.core.divisible import (  # noqa: F401
-    EngineConfig, Scenario, SimResult, make_scenario, simulate, simulate_batch,
-    default_max_events,
+    DivisibleModel, EngineConfig, Scenario, SimResult, make_scenario,
+    simulate, simulate_batch, default_max_events,
 )
-from repro.core.sweep import run_grid, quick_sim, GridResult, simulate_sharded  # noqa: F401
+from repro.core.sweep import (  # noqa: F401
+    run_grid, quick_sim, GridResult, simulate_sharded, make_model, as_model,
+)
 from repro.core import analysis  # noqa: F401

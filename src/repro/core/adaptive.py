@@ -1,4 +1,4 @@
-"""Adaptive-task Work-Stealing engine (paper §2.1.3).
+"""Adaptive-task task model (paper §2.1.3) over the unified event core.
 
 The whole workload starts as one big task on processor 0. A successful steal
 *splits* the victim's running task: the thief receives half the remaining
@@ -11,25 +11,26 @@ stolen like DAG tasks, but cannot themselves be split. Each split chains the
 victim's merge-parent pointer, so the merges form the binary "bring together"
 tree of [Roch et al. 2006] prefix-style adaptive algorithms.
 
-Termination follows the paper's task-engine rule exactly: the simulation ends
-when the number of *created* tasks equals the number of *completed* tasks.
+Event machinery, victim selection, SWT/MWT and steal-threshold semantics are
+shared through ``repro.core.engine`` (DESIGN.md §2); this module defines only
+the adaptive :class:`TaskModel` and its public types. Termination follows the
+paper's task-engine rule exactly: the simulation ends when the number of
+*created* tasks equals the number of *completed* tasks.
 
 Work/time are int32; bit-exact vs ``oracle.simulate_adaptive_oracle``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
-from repro.core import topology as topo_mod
-from repro.core.divisible import (ACTIVE, ANS_FLIGHT, INF32, REQ_FLIGHT,
-                                  Scenario)
+from repro.core import engine as eng
+from repro.core.engine import (ACTIVE, ANS_FLIGHT, EV_ANS_FAIL, EV_ANS_OK,
+                               EV_IDLE, EV_REQ_FAIL, EV_REQ_OK, INF32,
+                               REQ_FLIGHT, Scenario)
 from repro.core.topology import Topology
 
 
@@ -47,21 +48,13 @@ class AdaptiveSimResult(NamedTuple):
     n_created: jnp.ndarray
     n_completed: jnp.ndarray
     overflow: jnp.ndarray
+    trace: jnp.ndarray        # int32[max_trace, 4] (t, proc, kind, aux)
+    n_trace: jnp.ndarray
 
 
-class _State(NamedTuple):
-    t: jnp.ndarray
-    state: jnp.ndarray
-    ev_time: jnp.ndarray
+class AdaptiveState(NamedTuple):
+    """Per-model state pytree: the growing task pool + ready-merge deques."""
     cur_task: jnp.ndarray     # int32[p] pool id; -1 none
-    idle_at: jnp.ndarray      # completion time of running task
-    victim: jnp.ndarray
-    stolen: jnp.ndarray       # int32[p] pool id in flight; -1 failed
-    busy_until: jnp.ndarray
-    rng: jnp.ndarray
-    rr_aux: jnp.ndarray
-    idle_since: jnp.ndarray
-    executed: jnp.ndarray
     # task pool
     tdur: jnp.ndarray         # int32[cap] merge dur / thief-task size at creation
     mpar: jnp.ndarray         # int32[cap] merge parent (-1 root)
@@ -73,20 +66,10 @@ class _State(NamedTuple):
     head: jnp.ndarray
     tail: jnp.ndarray
     # counters
-    active_count: jnp.ndarray
     n_created: jnp.ndarray
     n_completed: jnp.ndarray
-    n_events: jnp.ndarray
-    n_requests: jnp.ndarray
-    n_success: jnp.ndarray
-    n_fail: jnp.ndarray
     n_splits: jnp.ndarray
-    total_idle: jnp.ndarray
     total_merge_work: jnp.ndarray
-    startup_end: jnp.ndarray
-    makespan: jnp.ndarray
-    done: jnp.ndarray
-    pool_overflow: jnp.ndarray
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +82,8 @@ class AdaptiveEngineConfig:
     pool_cap: int = 4096          # >= 1 + 2 * max_splits
     deque_cap: int = 256
     max_events: int = 1 << 20
+    log_trace: bool = False
+    max_trace: int = 0
 
     @property
     def p(self) -> int:
@@ -109,275 +94,207 @@ class AdaptiveEngineConfig:
                 + (jnp.asarray(s, jnp.int32) * self.merge_beta_num) // self.merge_beta_den)
 
 
-def _dist(cid, hops, scn, i, j):
-    same = cid[i] == cid[j]
-    d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i, j])
-    return jnp.where(i == j, jnp.int32(0), d).astype(jnp.int32)
+@dataclasses.dataclass(frozen=True)
+class AdaptiveModel(eng.TaskModel):
+    """Adaptive task engine: splittable work + a binary merge-task tree."""
+    cfg: AdaptiveEngineConfig
 
-
-def _select_victim(cfg, cid, hops, scn, s, i):
-    from repro.core import divisible as dv
-    shim = dv._State(
-        t=s.t, state=s.state, idle_at=s.idle_at, ev_time=s.ev_time,
-        victim=s.victim, stolen=s.stolen, busy_until=s.busy_until, rng=s.rng,
-        rr_aux=s.rr_aux, idle_since=s.idle_since, executed=s.executed,
-        active_count=s.active_count, n_events=s.n_events,
-        n_requests=s.n_requests, n_success=s.n_success, n_fail=s.n_fail,
-        total_idle=s.total_idle, startup_end=s.startup_end,
-        makespan=s.makespan, done=s.done, trace=jnp.zeros((1, 4), jnp.int32),
-        n_trace=jnp.int32(0))
-    dcfg = dv.EngineConfig(topology=cfg.topology, mwt=cfg.mwt,
-                           max_events=cfg.max_events)
-    return dv._select_victim(dcfg, cid, hops, scn, shim, i)
-
-
-def _start_stealing(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    v, rng_i, rr_i = _select_victim(cfg, cid, hops, scn, s, i)
-    d = _dist(cid, hops, scn, i, v)
-    return s._replace(
-        state=s.state.at[i].set(REQ_FLIGHT),
-        victim=s.victim.at[i].set(v),
-        ev_time=s.ev_time.at[i].set(t + d),
-        rng=s.rng.at[i].set(rng_i),
-        rr_aux=s.rr_aux.at[i].set(rr_i),
-    )
-
-
-def _push(cfg, s: _State, i, task) -> _State:
-    tl = s.tail[i]
-    ok = tl < cfg.deque_cap
-    pos = jnp.minimum(tl, cfg.deque_cap - 1)
-    return s._replace(
-        buf=s.buf.at[i, pos].set(jnp.where(ok, task, s.buf[i, pos])),
-        tail=s.tail.at[i].add(jnp.where(ok, 1, 0)),
-        pool_overflow=s.pool_overflow | ~ok,
-    )
-
-
-def _complete_task(cfg, s: _State, i, c, t) -> _State:
-    """Task c completes on proc i: decrement its merge parent, maybe ready it."""
-    s = s._replace(n_completed=s.n_completed + 1)
-    m = s.mpar[c]
-    has_parent = m >= 0
-    pc = jnp.where(has_parent, s.tpred[jnp.maximum(m, 0)] - 1, 1)
-    s = s._replace(tpred=s.tpred.at[jnp.maximum(m, 0)].set(
-        jnp.where(has_parent, pc, s.tpred[jnp.maximum(m, 0)])))
-    ready = has_parent & (pc == 0)
-    return lax.cond(ready, lambda st: _push(cfg, st, i, m), lambda st: st, s)
-
-
-def _do_idle(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    c = s.cur_task[i]
-    s = lax.cond(c >= 0, lambda st: _complete_task(cfg, st, i, c, t),
-                 lambda st: st, s)
-    s = s._replace(cur_task=s.cur_task.at[i].set(-1))
-
-    finished = s.n_completed >= s.n_created
-
-    def _finish(st: _State) -> _State:
-        idle_now = jnp.where((st.cur_task >= 0) | (jnp.arange(cfg.p) == i),
-                             0, t - st.idle_since)
-        return st._replace(
-            done=jnp.bool_(True), makespan=t,
-            ev_time=jnp.full((cfg.p,), INF32, jnp.int32),
-            total_idle=st.total_idle + jnp.sum(idle_now),
+    def init(self, arrays, scn: Scenario, core: eng.CoreState):
+        p, cap = self.p, self.cfg.pool_cap
+        idle_at = core.idle_at.at[0].set(scn.W)
+        core = core._replace(
+            idle_at=idle_at,
+            ev_time=idle_at,
+            stolen=jnp.full((p,), -1, jnp.int32),
+            executed=core.executed.at[0].set(scn.W),
         )
+        ms = AdaptiveState(
+            cur_task=jnp.full((p,), -1, jnp.int32).at[0].set(0),
+            tdur=jnp.zeros((cap,), jnp.int32).at[0].set(scn.W),
+            mpar=jnp.full((cap,), -1, jnp.int32),
+            tpred=jnp.zeros((cap,), jnp.int32),
+            is_merge=jnp.zeros((cap,), jnp.bool_),
+            next_free=jnp.int32(1),
+            buf=jnp.zeros((p, self.cfg.deque_cap), jnp.int32),
+            head=jnp.zeros((p,), jnp.int32),
+            tail=jnp.zeros((p,), jnp.int32),
+            n_created=jnp.int32(1),
+            n_completed=jnp.int32(0),
+            n_splits=jnp.int32(0),
+            total_merge_work=jnp.int32(0),
+        )
+        return core, ms
 
-    def _continue(st: _State) -> _State:
-        empty = st.head[i] >= st.tail[i]
+    def is_done(self, arrays, core, ms: AdaptiveState, i, t):
+        return ms.n_completed >= ms.n_created
 
-        def pop_local(st: _State) -> _State:
-            pos = st.tail[i] - 1     # merges: LIFO locally
-            task = st.buf[i, pos]
-            end = t + st.tdur[task]
-            return st._replace(
-                tail=st.tail.at[i].add(-1),
-                cur_task=st.cur_task.at[i].set(task),
-                idle_at=st.idle_at.at[i].set(end),
-                ev_time=st.ev_time.at[i].set(end),
-                executed=st.executed.at[i].add(st.tdur[task]),
+    def _push(self, core, ms: AdaptiveState, i, task):
+        """Push a ready merge task to i's deque tail (overflow halts)."""
+        cap = self.cfg.deque_cap
+        tl = ms.tail[i]
+        ok = tl < cap
+        pos = jnp.minimum(tl, cap - 1)
+        ms = ms._replace(
+            buf=ms.buf.at[i, pos].set(jnp.where(ok, task, ms.buf[i, pos])),
+            tail=ms.tail.at[i].add(jnp.where(ok, 1, 0)),
+        )
+        return core._replace(halt=core.halt | ~ok), ms
+
+    def _complete_task(self, core, ms: AdaptiveState, i, c, t):
+        """Task c completes on proc i: decrement its merge parent, maybe
+        ready it."""
+        ms = ms._replace(n_completed=ms.n_completed + 1)
+        m = ms.mpar[c]
+        has_parent = m >= 0
+        pc = jnp.where(has_parent, ms.tpred[jnp.maximum(m, 0)] - 1, 1)
+        ms = ms._replace(tpred=ms.tpred.at[jnp.maximum(m, 0)].set(
+            jnp.where(has_parent, pc, ms.tpred[jnp.maximum(m, 0)])))
+        ready = has_parent & (pc == 0)
+        return lax.cond(ready, lambda s: self._push(s[0], s[1], i, m),
+                        lambda s: s, (core, ms))
+
+    def on_idle(self, arrays, cid, hops, scn, core, ms: AdaptiveState, i, t):
+        c = ms.cur_task[i]
+        core, ms = lax.cond(
+            c >= 0, lambda s: self._complete_task(s[0], s[1], i, c, t),
+            lambda s: s, (core, ms))
+        ms = ms._replace(cur_task=ms.cur_task.at[i].set(-1))
+
+        finished = self.is_done(arrays, core, ms, i, t)
+
+        def _finish(s):
+            core, ms = s
+            idle_now = jnp.where(
+                (ms.cur_task >= 0) | (jnp.arange(self.p) == i),
+                0, t - core.idle_since)
+            return eng.finish(self, core, t, idle_now), ms
+
+        def _continue(s):
+            core, ms = s
+            empty = ms.head[i] >= ms.tail[i]
+
+            def pop_local(s):
+                core, ms = s
+                pos = ms.tail[i] - 1     # merges: LIFO locally
+                task = ms.buf[i, pos]
+                end = t + ms.tdur[task]
+                ms = ms._replace(
+                    tail=ms.tail.at[i].add(-1),
+                    cur_task=ms.cur_task.at[i].set(task),
+                )
+                core = core._replace(
+                    idle_at=core.idle_at.at[i].set(end),
+                    ev_time=core.ev_time.at[i].set(end),
+                    executed=core.executed.at[i].add(ms.tdur[task]),
+                )
+                return core, ms
+
+            def steal(s):
+                core, ms = s
+                core = eng.enter_idle(core, i, t)
+                core = eng.log(self, core, t, i, EV_IDLE, 0)
+                return eng.start_stealing(self, cid, hops, scn, core, i, t), ms
+
+            return lax.cond(empty, steal, pop_local, s)
+
+        return lax.cond(finished, _finish, _continue, (core, ms))
+
+    def on_request(self, arrays, cid, hops, scn, core, ms: AdaptiveState, i, t):
+        v = core.victim[i]
+        d_vi = eng.dist(cid, hops, scn, v, i)
+        free = eng.chan_free(self, core, v, t)
+
+        qlen = ms.tail[v] - ms.head[v]
+        can_queue = (qlen > 0) & free
+
+        # split only a *running work* task
+        c_v = ms.cur_task[v]
+        running_work = ((core.state[v] == ACTIVE) & (c_v >= 0)
+                        & ~ms.is_merge[jnp.maximum(c_v, 0)])
+        w_v = jnp.where(running_work, core.idle_at[v] - t, 0)
+        thr = eng.steal_threshold(scn, d_vi)
+        amt = w_v // 2
+        room = ms.next_free + 2 <= self.cfg.pool_cap
+        can_split = running_work & (amt >= 1) & (w_v > thr) & free & room
+
+        def steal_queue(s):
+            core, ms = s
+            task = ms.buf[v, ms.head[v]]
+            ms = ms._replace(head=ms.head.at[v].add(1))
+            return core, ms, task
+
+        def steal_split(s):
+            core, ms = s
+            m_id = ms.next_free
+            t_id = ms.next_free + 1
+            mdur = self.cfg.merge_dur(amt)
+            new_idle_v = t + (w_v - amt)
+            ms = ms._replace(
+                tdur=ms.tdur.at[m_id].set(mdur).at[t_id].set(amt),
+                mpar=ms.mpar.at[m_id].set(ms.mpar[c_v]).at[t_id].set(m_id)
+                        .at[c_v].set(m_id),
+                tpred=ms.tpred.at[m_id].set(2).at[t_id].set(0),
+                is_merge=ms.is_merge.at[m_id].set(True).at[t_id].set(False),
+                next_free=ms.next_free + 2,
+                n_created=ms.n_created + 2,
+                n_splits=ms.n_splits + 1,
+                total_merge_work=ms.total_merge_work + mdur,
             )
+            core = core._replace(
+                idle_at=core.idle_at.at[v].set(new_idle_v),
+                ev_time=core.ev_time.at[v].set(new_idle_v),
+                executed=core.executed.at[v].add(-amt),
+            )
+            return core, ms, t_id
 
-        def steal(st: _State) -> _State:
-            st = st._replace(active_count=st.active_count - 1,
-                             idle_since=st.idle_since.at[i].set(t))
-            return _start_stealing(cfg, cid, hops, scn, st, i, t)
+        def fail(s):
+            core, ms = s
+            return core, ms, jnp.int32(-1)
 
-        return lax.cond(empty, steal, pop_local, st)
+        branch = jnp.where(can_queue, 0, jnp.where(can_split, 1, 2))
+        core, ms, payload = lax.switch(
+            branch, [steal_queue, steal_split, fail], (core, ms))
+        ok = can_queue | can_split
+        core = eng.deliver_answer(core, i, v, t, d_vi, ok, payload)
+        core = eng.log(self, core, t, i,
+                       jnp.where(ok, EV_REQ_OK, EV_REQ_FAIL), v)
+        return core, ms
 
-    return lax.cond(finished, _finish, _continue, s)
+    def on_answer(self, arrays, cid, hops, scn, core, ms: AdaptiveState, i, t):
+        task = core.stolen[i]
+        ok = task >= 0
 
+        def got(s):
+            core, ms = s
+            end = t + ms.tdur[task]
+            core = eng.acquire_work(self, core, i, t, end, ms.tdur[task],
+                                    jnp.int32(-1))
+            ms = ms._replace(cur_task=ms.cur_task.at[i].set(task))
+            return eng.log(self, core, t, i, EV_ANS_OK, task), ms
 
-def _do_req(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    v = s.victim[i]
-    d_vi = _dist(cid, hops, scn, v, i)
-    chan_free = jnp.bool_(cfg.mwt) | (t >= s.busy_until[v])
-    s = s._replace(n_requests=s.n_requests + 1)
+        def retry(s):
+            core, ms = s
+            core = eng.start_stealing(self, cid, hops, scn, core, i, t)
+            return eng.log(self, core, t, i, EV_ANS_FAIL, core.victim[i]), ms
 
-    qlen = s.tail[v] - s.head[v]
-    can_queue = (qlen > 0) & chan_free
+        return lax.cond(ok, got, retry, (core, ms))
 
-    # split only a *running work* task
-    c_v = s.cur_task[v]
-    running_work = (s.state[v] == ACTIVE) & (c_v >= 0) & ~s.is_merge[jnp.maximum(c_v, 0)]
-    w_v = jnp.where(running_work, s.idle_at[v] - t, 0)
-    thr = scn.theta_static + scn.theta_comm * d_vi
-    amt = w_v // 2
-    room = s.next_free + 2 <= cfg.pool_cap
-    can_split = running_work & (amt >= 1) & (w_v > thr) & chan_free & room
-
-    def steal_queue(st: _State) -> _State:
-        task = st.buf[v, st.head[v]]
-        return st._replace(
-            head=st.head.at[v].add(1),
-            stolen=st.stolen.at[i].set(task),
-            busy_until=st.busy_until.at[v].set(t + d_vi),
-            n_success=st.n_success + 1,
+    def results(self, core: eng.CoreState, ms: AdaptiveState) -> AdaptiveSimResult:
+        return AdaptiveSimResult(
+            makespan=core.makespan, n_events=core.n_events,
+            n_requests=core.n_requests, n_success=core.n_success,
+            n_fail=core.n_fail, n_splits=ms.n_splits,
+            total_idle=core.total_idle, startup_end=core.startup_end,
+            executed=core.executed, total_merge_work=ms.total_merge_work,
+            n_created=ms.n_created, n_completed=ms.n_completed,
+            overflow=(~core.done) | core.halt,
+            trace=core.trace, n_trace=core.n_trace,
         )
-
-    def steal_split_full(st: _State) -> _State:
-        m_id = st.next_free
-        t_id = st.next_free + 1
-        mdur = cfg.merge_dur(amt)
-        new_idle_v = t + (w_v - amt)
-        return st._replace(
-            tdur=st.tdur.at[m_id].set(mdur).at[t_id].set(amt),
-            mpar=st.mpar.at[m_id].set(st.mpar[c_v]).at[t_id].set(m_id)
-                    .at[c_v].set(m_id),
-            tpred=st.tpred.at[m_id].set(2).at[t_id].set(0),
-            is_merge=st.is_merge.at[m_id].set(True).at[t_id].set(False),
-            next_free=st.next_free + 2,
-            n_created=st.n_created + 2,
-            n_splits=st.n_splits + 1,
-            total_merge_work=st.total_merge_work + mdur,
-            idle_at=st.idle_at.at[v].set(new_idle_v),
-            ev_time=st.ev_time.at[v].set(new_idle_v),
-            executed=st.executed.at[v].add(-amt),
-            busy_until=st.busy_until.at[v].set(t + d_vi),
-            stolen=st.stolen.at[i].set(t_id),
-            n_success=st.n_success + 1,
-        )
-
-    def fail(st: _State) -> _State:
-        return st._replace(stolen=st.stolen.at[i].set(-1),
-                           n_fail=st.n_fail + 1)
-
-    branch = jnp.where(can_queue, 0, jnp.where(can_split, 1, 2))
-    s = lax.switch(branch, [steal_queue, steal_split_full, fail], s)
-    return s._replace(
-        state=s.state.at[i].set(ANS_FLIGHT),
-        ev_time=s.ev_time.at[i].set(t + d_vi),
-    )
-
-
-def _do_ans(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    task = s.stolen[i]
-    ok = task >= 0
-
-    def got(st: _State) -> _State:
-        end = t + st.tdur[task]
-        new_active = st.active_count + 1
-        first_full = (new_active == cfg.p) & (st.startup_end < 0)
-        return st._replace(
-            state=st.state.at[i].set(ACTIVE),
-            cur_task=st.cur_task.at[i].set(task),
-            idle_at=st.idle_at.at[i].set(end),
-            ev_time=st.ev_time.at[i].set(end),
-            stolen=st.stolen.at[i].set(-1),
-            executed=st.executed.at[i].add(st.tdur[task]),
-            active_count=new_active,
-            total_idle=st.total_idle + (t - st.idle_since[i]),
-            startup_end=jnp.where(first_full, t, st.startup_end),
-        )
-
-    def retry(st: _State) -> _State:
-        return _start_stealing(cfg, cid, hops, scn, st, i, t)
-
-    return lax.cond(ok, got, retry, s)
-
-
-def _init_state(cfg: AdaptiveEngineConfig, scn: Scenario) -> _State:
-    p, cap = cfg.p, cfg.pool_cap
-    idx = jnp.arange(p, dtype=jnp.uint32)
-    rng = jax.vmap(topo_mod.seed_state, in_axes=(None, 0))(scn.seed, idx)
-    idle_at = jnp.zeros((p,), jnp.int32).at[0].set(scn.W)
-    return _State(
-        t=jnp.int32(0),
-        state=jnp.full((p,), ACTIVE, jnp.int32),
-        ev_time=idle_at,
-        cur_task=jnp.full((p,), -1, jnp.int32).at[0].set(0),
-        idle_at=idle_at,
-        victim=jnp.zeros((p,), jnp.int32),
-        stolen=jnp.full((p,), -1, jnp.int32),
-        busy_until=jnp.zeros((p,), jnp.int32),
-        rng=rng,
-        rr_aux=jnp.arange(p, dtype=jnp.int32),
-        idle_since=jnp.zeros((p,), jnp.int32),
-        executed=jnp.zeros((p,), jnp.int32).at[0].set(scn.W),
-        tdur=jnp.zeros((cap,), jnp.int32).at[0].set(scn.W),
-        mpar=jnp.full((cap,), -1, jnp.int32),
-        tpred=jnp.zeros((cap,), jnp.int32),
-        is_merge=jnp.zeros((cap,), jnp.bool_),
-        next_free=jnp.int32(1),
-        buf=jnp.zeros((p, cfg.deque_cap), jnp.int32),
-        head=jnp.zeros((p,), jnp.int32),
-        tail=jnp.zeros((p,), jnp.int32),
-        active_count=jnp.int32(p),
-        n_created=jnp.int32(1),
-        n_completed=jnp.int32(0),
-        n_events=jnp.int32(0),
-        n_requests=jnp.int32(0),
-        n_success=jnp.int32(0),
-        n_fail=jnp.int32(0),
-        n_splits=jnp.int32(0),
-        total_idle=jnp.int32(0),
-        total_merge_work=jnp.int32(0),
-        startup_end=jnp.int32(-1),
-        makespan=jnp.int32(-1),
-        done=jnp.bool_(False),
-        pool_overflow=jnp.bool_(False),
-    )
-
-
-def _simulate(cfg: AdaptiveEngineConfig, scn: Scenario) -> AdaptiveSimResult:
-    cid = jnp.asarray(cfg.topology.cluster_id)
-    hops = jnp.asarray(cfg.topology.hops)
-
-    def cond(s: _State):
-        return (~s.done) & (s.n_events < cfg.max_events) & (~s.pool_overflow)
-
-    def body(s: _State) -> _State:
-        i = jnp.argmin(s.ev_time).astype(jnp.int32)
-        t = s.ev_time[i]
-        s = s._replace(t=t, n_events=s.n_events + 1)
-        return lax.switch(
-            s.state[i],
-            [functools.partial(f, cfg, cid, hops, scn)
-             for f in (_do_idle, _do_req, _do_ans)],
-            s, i, t)
-
-    s = lax.while_loop(cond, body, _init_state(cfg, scn))
-    return AdaptiveSimResult(
-        makespan=s.makespan, n_events=s.n_events, n_requests=s.n_requests,
-        n_success=s.n_success, n_fail=s.n_fail, n_splits=s.n_splits,
-        total_idle=s.total_idle, startup_end=s.startup_end,
-        executed=s.executed, total_merge_work=s.total_merge_work,
-        n_created=s.n_created, n_completed=s.n_completed,
-        overflow=(~s.done) | s.pool_overflow,
-    )
-
-
-@functools.lru_cache(maxsize=64)
-def _compiled(cfg: AdaptiveEngineConfig, batched: bool):
-    fn = functools.partial(_simulate, cfg)
-    if batched:
-        fn = jax.vmap(fn)
-    return jax.jit(fn)
 
 
 def simulate_adaptive(cfg: AdaptiveEngineConfig, scn: Scenario) -> AdaptiveSimResult:
-    return _compiled(cfg, False)(scn)
+    return eng.simulate(AdaptiveModel(cfg), scn)
 
 
 def simulate_adaptive_batch(cfg: AdaptiveEngineConfig, scn: Scenario) -> AdaptiveSimResult:
-    return _compiled(cfg, True)(scn)
+    return eng.simulate_batch(AdaptiveModel(cfg), scn)

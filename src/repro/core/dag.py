@@ -1,4 +1,4 @@
-"""DAG-of-tasks Work-Stealing engine (paper §2.1.2).
+"""DAG-of-tasks task model (paper §2.1.2) over the unified event core.
 
 Each processor keeps a deque of *activated* tasks. An active processor runs
 one task; completion decrements the children's predecessor counts and pushes
@@ -9,29 +9,28 @@ exactly the steal rule of the paper) or FIFO (``owner_lifo=False``, the
 literal reading of the paper's text); steals always take the head.
 
 Event machinery, victim selection, SWT/MWT and steal-threshold semantics are
-shared with the divisible engine (one pending event per processor, argmin
-event selection). For DAGs the steal threshold is a queue-length threshold:
-a steal fails unless ``len(queue) > theta_static`` (there is no divisible
-work to meter, matching the paper's split()->None for DAG tasks).
+shared with every other task model through ``repro.core.engine`` (one pending
+event per processor, argmin event selection — DESIGN.md §2); this module
+defines only the DAG :class:`TaskModel` and its public types. For DAGs the
+steal threshold is a queue-length threshold: a steal fails unless
+``len(queue) > theta_static`` (there is no divisible work to meter, matching
+the paper's split()->None for DAG tasks).
 
 All int32; bit-exact against ``repro.core.oracle.simulate_dag_oracle``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
-from repro.core import topology as topo_mod
+from repro.core import engine as eng
 from repro.core.dag_gen import TaskDag
-from repro.core.divisible import (ACTIVE, ANS_FLIGHT, EV_ANS_FAIL, EV_ANS_OK,
-                                  EV_IDLE, EV_REQ_FAIL, EV_REQ_OK, INF32,
-                                  REQ_FLIGHT, Scenario, make_scenario)
+from repro.core.engine import (ACTIVE, ANS_FLIGHT, EV_ANS_FAIL, EV_ANS_OK,
+                               EV_IDLE, EV_REQ_FAIL, EV_REQ_OK, INF32,
+                               REQ_FLIGHT, Scenario, make_scenario)
 from repro.core.topology import Topology
 
 
@@ -47,37 +46,19 @@ class DagSimResult(NamedTuple):
     tasks_run: jnp.ndarray     # int32[p] number of tasks run per processor
     n_completed: jnp.ndarray
     overflow: jnp.ndarray      # hit max_events or deque overflow
+    trace: jnp.ndarray         # int32[max_trace, 4] (t, proc, kind, aux)
+    n_trace: jnp.ndarray
 
 
-class _State(NamedTuple):
-    t: jnp.ndarray
-    state: jnp.ndarray
-    ev_time: jnp.ndarray
+class DagState(NamedTuple):
+    """Per-model state pytree: the task engine's deques + activation front."""
     cur_task: jnp.ndarray      # int32[p]; -1 = no running task
-    cur_end: jnp.ndarray       # int32[p]; completion time of cur task
-    victim: jnp.ndarray
-    stolen: jnp.ndarray        # int32[p]; task id in flight, -1 = failed
-    busy_until: jnp.ndarray
-    rng: jnp.ndarray
-    rr_aux: jnp.ndarray
-    idle_since: jnp.ndarray
-    executed: jnp.ndarray
-    tasks_run: jnp.ndarray
     pred: jnp.ndarray          # int32[n] remaining predecessor counts
     buf: jnp.ndarray           # int32[p, L] deques
     head: jnp.ndarray          # int32[p]
     tail: jnp.ndarray          # int32[p]
-    active_count: jnp.ndarray
+    tasks_run: jnp.ndarray     # int32[p]
     n_completed: jnp.ndarray
-    n_events: jnp.ndarray
-    n_requests: jnp.ndarray
-    n_success: jnp.ndarray
-    n_fail: jnp.ndarray
-    total_idle: jnp.ndarray
-    startup_end: jnp.ndarray
-    makespan: jnp.ndarray
-    done: jnp.ndarray
-    deque_overflow: jnp.ndarray
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +69,8 @@ class DagEngineConfig:
     owner_lifo: bool = True       # ABP discipline (steal-largest-height)
     deque_cap: Optional[int] = None  # default: n tasks (always sufficient)
     max_events: int = 1 << 20
+    log_trace: bool = False
+    max_trace: int = 0
 
     @property
     def p(self) -> int:
@@ -98,237 +81,164 @@ class DagEngineConfig:
         return self.dag.n if self.deque_cap is None else self.deque_cap
 
 
-def _dist(cid, hops, scn, i, j):
-    same = cid[i] == cid[j]
-    d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i, j])
-    return jnp.where(i == j, jnp.int32(0), d).astype(jnp.int32)
+@dataclasses.dataclass(frozen=True)
+class DagModel(eng.TaskModel):
+    """DAG task engine: work is a static precedence graph of unit tasks."""
+    cfg: DagEngineConfig
 
+    def static_arrays(self):
+        dag = self.cfg.dag
+        cidx = jnp.asarray(dag.child_idx)
+        if cidx.shape[0] == 0:        # keep Pallas inputs non-empty
+            cidx = jnp.zeros((1,), jnp.int32)
+        return (jnp.asarray(dag.dur), jnp.asarray(dag.child_ptr), cidx,
+                jnp.asarray(dag.pred_count))
 
-def _select_victim(cfg, cid, hops, scn, s, i):
-    # Reuse the divisible engine's strategies through a tiny shim state.
-    from repro.core import divisible as dv
-    shim = dv._State(
-        t=s.t, state=s.state, idle_at=s.ev_time, ev_time=s.ev_time,
-        victim=s.victim, stolen=s.stolen, busy_until=s.busy_until, rng=s.rng,
-        rr_aux=s.rr_aux, idle_since=s.idle_since, executed=s.executed,
-        active_count=s.active_count, n_events=s.n_events,
-        n_requests=s.n_requests, n_success=s.n_success, n_fail=s.n_fail,
-        total_idle=s.total_idle, startup_end=s.startup_end,
-        makespan=s.makespan, done=s.done, trace=jnp.zeros((1, 4), jnp.int32),
-        n_trace=jnp.int32(0))
-    dcfg = dv.EngineConfig(topology=cfg.topology, mwt=cfg.mwt,
-                           max_events=cfg.max_events)
-    return dv._select_victim(dcfg, cid, hops, scn, shim, i)
-
-
-def _start_stealing(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    v, rng_i, rr_i = _select_victim(cfg, cid, hops, scn, s, i)
-    d = _dist(cid, hops, scn, i, v)
-    return s._replace(
-        state=s.state.at[i].set(REQ_FLIGHT),
-        victim=s.victim.at[i].set(v),
-        ev_time=s.ev_time.at[i].set(t + d),
-        rng=s.rng.at[i].set(rng_i),
-        rr_aux=s.rr_aux.at[i].set(rr_i),
-    )
-
-
-def _activate_children(cfg: DagEngineConfig, dur, cptr, cidx, s: _State, i, c) -> _State:
-    """end_execute_task(): decrement preds of c's children; push ready ones."""
-    start, stop = cptr[c], cptr[c + 1]
-
-    def body(k, st: _State) -> _State:
-        child = cidx[k]
-        pc = st.pred[child] - 1
-        ready = pc == 0
-        tl = st.tail[i]
-        ok = tl < cfg.cap
-        new_buf = st.buf.at[i, jnp.minimum(tl, cfg.cap - 1)].set(
-            jnp.where(ready & ok, child, st.buf[i, jnp.minimum(tl, cfg.cap - 1)]))
-        return st._replace(
-            pred=st.pred.at[child].set(pc),
-            buf=new_buf,
-            tail=st.tail.at[i].add(jnp.where(ready & ok, 1, 0)),
-            deque_overflow=st.deque_overflow | (ready & ~ok),
+    def init(self, arrays, scn: Scenario, core: eng.CoreState):
+        dur, _, _, pred0 = arrays
+        p = self.p
+        src = int(self.cfg.dag.sources[0])
+        core = core._replace(
+            ev_time=core.ev_time.at[0].set(dur[src]),
+            stolen=jnp.full((p,), -1, jnp.int32),
         )
-
-    return lax.fori_loop(start, stop, body, s)
-
-
-def _do_idle(cfg, cid, hops, scn, dur, cptr, cidx, s: _State, i, t) -> _State:
-    c = s.cur_task[i]
-    has_task = c >= 0
-
-    def complete(st: _State) -> _State:
-        st = st._replace(
-            n_completed=st.n_completed + 1,
-            executed=st.executed.at[i].add(dur[c]),
-            tasks_run=st.tasks_run.at[i].add(1),
+        ms = DagState(
+            cur_task=jnp.full((p,), -1, jnp.int32).at[0].set(src),
+            pred=pred0,
+            buf=jnp.zeros((p, self.cfg.cap), jnp.int32),
+            head=jnp.zeros((p,), jnp.int32),
+            tail=jnp.zeros((p,), jnp.int32),
+            tasks_run=jnp.zeros((p,), jnp.int32),
+            n_completed=jnp.int32(0),
         )
-        return _activate_children(cfg, dur, cptr, cidx, st, i, c)
+        return core, ms
 
-    s = lax.cond(has_task, complete, lambda st: st, s)
-    s = s._replace(cur_task=s.cur_task.at[i].set(-1))
+    def is_done(self, arrays, core, ms: DagState, i, t):
+        return ms.n_completed >= self.cfg.dag.n
 
-    finished = s.n_completed >= cfg.dag.n
+    def _activate_children(self, cptr, cidx, core, ms: DagState, i, c):
+        """end_execute_task(): decrement preds of c's children; push ready
+        ones to i's own deque tail (capacity overflow halts the engine)."""
+        cap = self.cfg.cap
 
-    def _finish(st: _State) -> _State:
-        idle_now = jnp.where((st.cur_task >= 0) | (jnp.arange(cfg.p) == i),
-                             0, t - st.idle_since)
-        return st._replace(
-            done=jnp.bool_(True), makespan=t,
-            ev_time=jnp.full((cfg.p,), INF32, jnp.int32),
-            total_idle=st.total_idle + jnp.sum(idle_now),
-        )
-
-    def _continue(st: _State) -> _State:
-        empty = st.head[i] >= st.tail[i]
-
-        def pop_local(st: _State) -> _State:
-            if cfg.owner_lifo:
-                pos = st.tail[i] - 1
-                st = st._replace(tail=st.tail.at[i].add(-1))
-            else:
-                pos = st.head[i]
-                st = st._replace(head=st.head.at[i].add(1))
-            task = st.buf[i, pos]
-            return st._replace(
-                cur_task=st.cur_task.at[i].set(task),
-                ev_time=st.ev_time.at[i].set(t + dur[task]),
+        def body(k, s):
+            core, ms = s
+            child = cidx[k]
+            pc = ms.pred[child] - 1
+            ready = pc == 0
+            tl = ms.tail[i]
+            ok = tl < cap
+            pos = jnp.minimum(tl, cap - 1)
+            ms = ms._replace(
+                pred=ms.pred.at[child].set(pc),
+                buf=ms.buf.at[i, pos].set(
+                    jnp.where(ready & ok, child, ms.buf[i, pos])),
+                tail=ms.tail.at[i].add(jnp.where(ready & ok, 1, 0)),
             )
+            core = core._replace(halt=core.halt | (ready & ~ok))
+            return core, ms
 
-        def steal(st: _State) -> _State:
-            st = st._replace(active_count=st.active_count - 1,
-                             idle_since=st.idle_since.at[i].set(t))
-            return _start_stealing(cfg, cid, hops, scn, st, i, t)
+        return lax.fori_loop(cptr[c], cptr[c + 1], body, (core, ms))
 
-        return lax.cond(empty, steal, pop_local, st)
+    def on_idle(self, arrays, cid, hops, scn, core, ms: DagState, i, t):
+        dur, cptr, cidx, _ = arrays
+        c = ms.cur_task[i]
+        has_task = c >= 0
 
-    return lax.cond(finished, _finish, _continue, s)
+        def complete(s):
+            core, ms = s
+            ms = ms._replace(n_completed=ms.n_completed + 1,
+                             tasks_run=ms.tasks_run.at[i].add(1))
+            core = core._replace(executed=core.executed.at[i].add(dur[c]))
+            return self._activate_children(cptr, cidx, core, ms, i, c)
 
+        core, ms = lax.cond(has_task, complete, lambda s: s, (core, ms))
+        ms = ms._replace(cur_task=ms.cur_task.at[i].set(-1))
 
-def _do_req(cfg, cid, hops, scn, dur, cptr, cidx, s: _State, i, t) -> _State:
-    v = s.victim[i]
-    qlen = s.tail[v] - s.head[v]
-    d_vi = _dist(cid, hops, scn, v, i)
-    chan_free = jnp.bool_(cfg.mwt) | (t >= s.busy_until[v])
-    ok = (qlen > scn.theta_static) & chan_free
-    task = jnp.where(ok, s.buf[v, s.head[v]], -1)
-    return s._replace(
-        head=s.head.at[v].add(jnp.where(ok, 1, 0)),
-        busy_until=s.busy_until.at[v].set(jnp.where(ok, t + d_vi, s.busy_until[v])),
-        stolen=s.stolen.at[i].set(task),
-        state=s.state.at[i].set(ANS_FLIGHT),
-        ev_time=s.ev_time.at[i].set(t + d_vi),
-        n_requests=s.n_requests + 1,
-        n_success=s.n_success + ok.astype(jnp.int32),
-        n_fail=s.n_fail + (~ok).astype(jnp.int32),
-    )
+        finished = self.is_done(arrays, core, ms, i, t)
 
+        def _finish(s):
+            core, ms = s
+            idle_now = jnp.where(
+                (ms.cur_task >= 0) | (jnp.arange(self.p) == i),
+                0, t - core.idle_since)
+            return eng.finish(self, core, t, idle_now), ms
 
-def _do_ans(cfg, cid, hops, scn, dur, cptr, cidx, s: _State, i, t) -> _State:
-    task = s.stolen[i]
-    ok = task >= 0
+        def _continue(s):
+            core, ms = s
+            empty = ms.head[i] >= ms.tail[i]
 
-    def got(st: _State) -> _State:
-        new_active = st.active_count + 1
-        first_full = (new_active == cfg.p) & (st.startup_end < 0)
-        return st._replace(
-            state=st.state.at[i].set(ACTIVE),
-            cur_task=st.cur_task.at[i].set(task),
-            ev_time=st.ev_time.at[i].set(t + dur[task]),
-            stolen=st.stolen.at[i].set(-1),
-            active_count=new_active,
-            total_idle=st.total_idle + (t - st.idle_since[i]),
-            startup_end=jnp.where(first_full, t, st.startup_end),
+            def pop_local(s):
+                core, ms = s
+                if self.cfg.owner_lifo:
+                    pos = ms.tail[i] - 1
+                    ms = ms._replace(tail=ms.tail.at[i].add(-1))
+                else:
+                    pos = ms.head[i]
+                    ms = ms._replace(head=ms.head.at[i].add(1))
+                task = ms.buf[i, pos]
+                ms = ms._replace(cur_task=ms.cur_task.at[i].set(task))
+                core = core._replace(
+                    ev_time=core.ev_time.at[i].set(t + dur[task]))
+                return core, ms
+
+            def steal(s):
+                core, ms = s
+                core = eng.enter_idle(core, i, t)
+                core = eng.log(self, core, t, i, EV_IDLE, 0)
+                return eng.start_stealing(self, cid, hops, scn, core, i, t), ms
+
+            return lax.cond(empty, steal, pop_local, s)
+
+        return lax.cond(finished, _finish, _continue, (core, ms))
+
+    def on_request(self, arrays, cid, hops, scn, core, ms: DagState, i, t):
+        v = core.victim[i]
+        qlen = ms.tail[v] - ms.head[v]
+        d_vi = eng.dist(cid, hops, scn, v, i)
+        free = eng.chan_free(self, core, v, t)
+        ok = (qlen > scn.theta_static) & free
+        task = jnp.where(ok, ms.buf[v, ms.head[v]], -1)
+        ms = ms._replace(head=ms.head.at[v].add(jnp.where(ok, 1, 0)))
+        core = eng.deliver_answer(core, i, v, t, d_vi, ok, task)
+        core = eng.log(self, core, t, i,
+                       jnp.where(ok, EV_REQ_OK, EV_REQ_FAIL), v)
+        return core, ms
+
+    def on_answer(self, arrays, cid, hops, scn, core, ms: DagState, i, t):
+        dur = arrays[0]
+        task = core.stolen[i]
+        ok = task >= 0
+
+        def got(s):
+            core, ms = s
+            core = eng.acquire_work(self, core, i, t, t + dur[task],
+                                    jnp.int32(0), jnp.int32(-1))
+            ms = ms._replace(cur_task=ms.cur_task.at[i].set(task))
+            return eng.log(self, core, t, i, EV_ANS_OK, task), ms
+
+        def retry(s):
+            core, ms = s
+            core = eng.start_stealing(self, cid, hops, scn, core, i, t)
+            return eng.log(self, core, t, i, EV_ANS_FAIL, core.victim[i]), ms
+
+        return lax.cond(ok, got, retry, (core, ms))
+
+    def results(self, core: eng.CoreState, ms: DagState) -> DagSimResult:
+        return DagSimResult(
+            makespan=core.makespan, n_events=core.n_events,
+            n_requests=core.n_requests, n_success=core.n_success,
+            n_fail=core.n_fail, total_idle=core.total_idle,
+            startup_end=core.startup_end, executed=core.executed,
+            tasks_run=ms.tasks_run, n_completed=ms.n_completed,
+            overflow=(~core.done) | core.halt,
+            trace=core.trace, n_trace=core.n_trace,
         )
-
-    def retry(st: _State) -> _State:
-        return _start_stealing(cfg, cid, hops, scn, st, i, t)
-
-    return lax.cond(ok, got, retry, s)
-
-
-def _init_state(cfg: DagEngineConfig, scn: Scenario) -> _State:
-    p, n = cfg.p, cfg.dag.n
-    idx = jnp.arange(p, dtype=jnp.uint32)
-    rng = jax.vmap(topo_mod.seed_state, in_axes=(None, 0))(scn.seed, idx)
-    dur = jnp.asarray(cfg.dag.dur)
-    src = int(cfg.dag.sources[0])
-    cur = jnp.full((p,), -1, jnp.int32).at[0].set(src)
-    ev = jnp.zeros((p,), jnp.int32).at[0].set(dur[src])
-    return _State(
-        t=jnp.int32(0),
-        state=jnp.full((p,), ACTIVE, jnp.int32),
-        ev_time=ev,
-        cur_task=cur,
-        cur_end=ev,
-        victim=jnp.zeros((p,), jnp.int32),
-        stolen=jnp.full((p,), -1, jnp.int32),
-        busy_until=jnp.zeros((p,), jnp.int32),
-        rng=rng,
-        rr_aux=jnp.arange(p, dtype=jnp.int32),
-        idle_since=jnp.zeros((p,), jnp.int32),
-        executed=jnp.zeros((p,), jnp.int32),
-        tasks_run=jnp.zeros((p,), jnp.int32),
-        pred=jnp.asarray(cfg.dag.pred_count),
-        buf=jnp.zeros((p, cfg.cap), jnp.int32),
-        head=jnp.zeros((p,), jnp.int32),
-        tail=jnp.zeros((p,), jnp.int32),
-        active_count=jnp.int32(p),
-        n_completed=jnp.int32(0),
-        n_events=jnp.int32(0),
-        n_requests=jnp.int32(0),
-        n_success=jnp.int32(0),
-        n_fail=jnp.int32(0),
-        total_idle=jnp.int32(0),
-        startup_end=jnp.int32(-1),
-        makespan=jnp.int32(-1),
-        done=jnp.bool_(False),
-        deque_overflow=jnp.bool_(False),
-    )
-
-
-def _simulate(cfg: DagEngineConfig, scn: Scenario) -> DagSimResult:
-    cid = jnp.asarray(cfg.topology.cluster_id)
-    hops = jnp.asarray(cfg.topology.hops)
-    dur = jnp.asarray(cfg.dag.dur)
-    cptr = jnp.asarray(cfg.dag.child_ptr)
-    cidx = jnp.asarray(cfg.dag.child_idx)
-
-    def cond(s: _State):
-        return (~s.done) & (s.n_events < cfg.max_events) & (~s.deque_overflow)
-
-    def body(s: _State) -> _State:
-        i = jnp.argmin(s.ev_time).astype(jnp.int32)
-        t = s.ev_time[i]
-        s = s._replace(t=t, n_events=s.n_events + 1)
-        return lax.switch(
-            s.state[i],
-            [functools.partial(f, cfg, cid, hops, scn, dur, cptr, cidx)
-             for f in (_do_idle, _do_req, _do_ans)],
-            s, i, t)
-
-    s = lax.while_loop(cond, body, _init_state(cfg, scn))
-    return DagSimResult(
-        makespan=s.makespan, n_events=s.n_events, n_requests=s.n_requests,
-        n_success=s.n_success, n_fail=s.n_fail, total_idle=s.total_idle,
-        startup_end=s.startup_end, executed=s.executed, tasks_run=s.tasks_run,
-        n_completed=s.n_completed, overflow=(~s.done) | s.deque_overflow,
-    )
-
-
-@functools.lru_cache(maxsize=64)
-def _compiled(cfg: DagEngineConfig, batched: bool):
-    fn = functools.partial(_simulate, cfg)
-    if batched:
-        fn = jax.vmap(fn)
-    return jax.jit(fn)
 
 
 def simulate_dag(cfg: DagEngineConfig, scn: Scenario) -> DagSimResult:
-    return _compiled(cfg, False)(scn)
+    return eng.simulate(DagModel(cfg), scn)
 
 
 def simulate_dag_batch(cfg: DagEngineConfig, scn: Scenario) -> DagSimResult:
-    return _compiled(cfg, True)(scn)
+    return eng.simulate_batch(DagModel(cfg), scn)

@@ -1,23 +1,12 @@
-"""Divisible-load Work-Stealing discrete-event engine (paper §2.1.1, §3).
+"""Divisible-load task model (paper §2.1.1, §3) over the unified event core.
 
-This is the event engine + processor engine + task engine specialized to the
-divisible-load task model the paper uses for all of its §4 experiments:
-``W`` unit tasks start on processor 0; an idle processor steals; a successful
-steal transfers floor(w/2) of the victim's remaining work.
-
-TPU-native adaptation of the paper's serial event heap (see DESIGN.md §2):
-every processor owns **exactly one** pending event —
-
-* ``ACTIVE``     -> its *idle event* (time its current work runs out),
-* ``REQ_FLIGHT`` -> the *steal-request event* (arrival at the victim),
-* ``ANS_FLIGHT`` -> the *steal-answer event* (arrival back at the thief),
-
-so the global heap collapses to ``argmin(ev_time)`` over a dense int32 vector,
-which vectorizes on the VPU and vmaps across scenario batches.
-
-All quantities are int32 (unit tasks, integer latencies); the engine is
-bit-exact reproducible and matches the numpy oracle in
-``repro/kernels/ref.py`` event-for-event.
+This is the task model the paper uses for all of its §4 experiments: ``W``
+unit tasks start on processor 0; an idle processor steals; a successful steal
+transfers floor(w/2) of the victim's remaining work. All event machinery —
+one pending event per processor, ``argmin(ev_time)`` selection, SWT/MWT
+answer policies, steal thresholds, victim-selection dispatch, xorshift32 PRNG
+lanes, trace logging — lives in ``repro.core.engine`` (DESIGN.md §2); this
+module defines only the divisible :class:`TaskModel` and its public types.
 
 Steal-answer policies (paper §2.4): ``mwt=True`` allows simultaneous answers
 (requests arriving at the same instant are serialized by processor index,
@@ -25,61 +14,26 @@ each taking half of what remains — exactly Fig 2); ``mwt=False`` (SWT) makes a
 victim refuse while a previous answer is still in flight. ``theta_static`` /
 ``theta_comm`` implement the steal threshold of §2.4.2: a steal fails unless
 the victim's remaining work exceeds ``theta_static + theta_comm·d(v,i)``.
+
+All quantities are int32 (unit tasks, integer latencies); the engine is
+bit-exact reproducible and matches the numpy oracle in
+``repro.core.oracle`` event-for-event.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import topology as topo_mod
-from repro.core.topology import Topology
-
-INF32 = np.int32(2**31 - 1)
-
-# Processor states (values are the lax.switch branch index).
-ACTIVE = 0
-REQ_FLIGHT = 1
-ANS_FLIGHT = 2
-
-# Trace event kinds (log engine).
-EV_IDLE = 0          # aux = 0
-EV_REQ_FAIL = 1      # aux = victim
-EV_REQ_OK = 2        # aux = victim (stolen amount recoverable from ANS_OK)
-EV_ANS_FAIL = 3      # aux = next victim chosen
-EV_ANS_OK = 4        # aux = stolen amount
-
-
-class Scenario(NamedTuple):
-    """Dynamic (traced, vmappable) per-simulation parameters."""
-    W: jnp.ndarray            # int32 total unit tasks
-    seed: jnp.ndarray         # uint32 scenario seed
-    lam_local: jnp.ndarray    # int32 intra-cluster delay
-    lam_remote: jnp.ndarray   # int32 per-hop inter-cluster delay
-    theta_static: jnp.ndarray  # int32 steal-threshold constant
-    theta_comm: jnp.ndarray    # int32 steal-threshold per unit of distance
-    remote_prob: jnp.ndarray   # uint32 fixed-point P(remote) for LOCAL_FIRST
-
-
-def make_scenario(W, seed, lam=1, lam_local=None, lam_remote=None,
-                  theta_static=0, theta_comm=0, remote_prob=0.25) -> Scenario:
-    """Convenience constructor. ``lam`` sets both latencies (one-cluster use)."""
-    ll = lam if lam_local is None else lam_local
-    lr = lam if lam_remote is None else lam_remote
-    return Scenario(
-        W=jnp.asarray(W, jnp.int32),
-        seed=jnp.asarray(seed, jnp.uint32),
-        lam_local=jnp.asarray(ll, jnp.int32),
-        lam_remote=jnp.asarray(lr, jnp.int32),
-        theta_static=jnp.asarray(theta_static, jnp.int32),
-        theta_comm=jnp.asarray(theta_comm, jnp.int32),
-        remote_prob=jnp.asarray(topo_mod.remote_prob_u32(remote_prob), jnp.uint32),
-    )
+from repro.core import engine as eng
+# Re-exported for backward compatibility (these historically lived here).
+from repro.core.engine import (  # noqa: F401
+    ACTIVE, ANS_FLIGHT, EV_ANS_FAIL, EV_ANS_OK, EV_IDLE, EV_REQ_FAIL,
+    EV_REQ_OK, INF32, REQ_FLIGHT, EngineConfig, Scenario, batch_scenarios,
+    make_scenario)
 
 
 class SimResult(NamedTuple):
@@ -96,289 +50,110 @@ class SimResult(NamedTuple):
     n_trace: jnp.ndarray        # int32 valid trace rows
 
 
-class _State(NamedTuple):
-    t: jnp.ndarray
-    state: jnp.ndarray        # int32[p]
-    idle_at: jnp.ndarray      # int32[p] (ACTIVE procs: completion time)
-    ev_time: jnp.ndarray      # int32[p]
-    victim: jnp.ndarray       # int32[p]
-    stolen: jnp.ndarray       # int32[p]
-    busy_until: jnp.ndarray   # int32[p] (SWT answer-channel horizon)
-    rng: jnp.ndarray          # uint32[p]
-    rr_aux: jnp.ndarray       # int32[p] round-robin cursor
-    idle_since: jnp.ndarray   # int32[p]
-    executed: jnp.ndarray     # int32[p]
-    active_count: jnp.ndarray
-    n_events: jnp.ndarray
-    n_requests: jnp.ndarray
-    n_success: jnp.ndarray
-    n_fail: jnp.ndarray
-    total_idle: jnp.ndarray
-    startup_end: jnp.ndarray
-    makespan: jnp.ndarray
-    done: jnp.ndarray
-    trace: jnp.ndarray
-    n_trace: jnp.ndarray
-
-
 @dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Static compile-time configuration (baked into the jitted program)."""
-    topology: Topology
-    mwt: bool = False                 # multiple work transfers (paper §2.4.1)
-    max_events: int = 1 << 20
-    log_trace: bool = False
-    max_trace: int = 0                # rows kept when log_trace
+class DivisibleModel(eng.TaskModel):
+    """Divisible-load task engine: work is a splittable int32 amount."""
+    cfg: EngineConfig
 
-    @property
-    def p(self) -> int:
-        return self.topology.p
-
-
-def _dist(cfg: EngineConfig, cid, hops, scn: Scenario, i, j):
-    """Scalar distance d(i, j) under the scenario's latency scalars."""
-    same = cid[i] == cid[j]
-    d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i, j])
-    return jnp.where(i == j, jnp.int32(0), d).astype(jnp.int32)
-
-
-def _select_victim(cfg: EngineConfig, cid, hops, scn: Scenario, s: _State, i):
-    """Victim selection (topology engine §3.3); returns (victim, rng', rr')."""
-    p = cfg.p
-    strat = cfg.topology.strategy
-    rng_i = s.rng[i]
-    if strat == topo_mod.UNIFORM:
-        rng_i = topo_mod.xorshift32(rng_i)
-        v = (rng_i % jnp.uint32(p - 1)).astype(jnp.int32)
-        v = v + (v >= i).astype(jnp.int32)
-        return v, rng_i, s.rr_aux[i]
-    if strat == topo_mod.LOCAL_FIRST:
-        rng_i = topo_mod.xorshift32(rng_i)
-        go_remote = rng_i < scn.remote_prob
-        rng_i = topo_mod.xorshift32(rng_i)
-        my = cid[i]
-        idx = jnp.arange(p, dtype=jnp.int32)
-        local_mask = (cid == my) & (idx != i)
-        remote_mask = cid != my
-        mask = jnp.where(go_remote, remote_mask, local_mask)
-        n = jnp.maximum(mask.sum().astype(jnp.uint32), jnp.uint32(1))
-        k = (rng_i % n).astype(jnp.int32)
-        csum = jnp.cumsum(mask.astype(jnp.int32))
-        v = jnp.argmax(csum > k).astype(jnp.int32)
-        v = jnp.where(v == i, (i + 1) % p, v)  # only if both masks empty
-        return v, rng_i, s.rr_aux[i]
-    if strat == topo_mod.INV_DISTANCE:
-        idx = jnp.arange(p, dtype=jnp.int32)
-        same = cid == cid[i]
-        d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i]).astype(jnp.float32)
-        w = jnp.where(idx == i, 0.0, 1.0 / jnp.maximum(d, 1.0))
-        c = jnp.cumsum(w)
-        rng_i = topo_mod.xorshift32(rng_i)
-        u = (rng_i.astype(jnp.float32) / jnp.float32(2**32)) * c[-1]
-        v = jnp.argmax(c > u).astype(jnp.int32)
-        v = jnp.where(v == i, (i + 1) % p, v)
-        return v, rng_i, s.rr_aux[i]
-    if strat == topo_mod.ROUND_ROBIN:
-        nxt = (s.rr_aux[i] + 1) % jnp.int32(p)
-        nxt = jnp.where(nxt == i, (nxt + 1) % jnp.int32(p), nxt)
-        return nxt, rng_i, nxt
-    raise ValueError(f"unknown strategy {strat}")
-
-
-def _log(cfg: EngineConfig, s: _State, t, proc, kind, aux) -> _State:
-    if not cfg.log_trace:
-        return s
-    row = jnp.stack([t, proc, jnp.int32(kind), jnp.asarray(aux, jnp.int32)])
-    idx = jnp.minimum(s.n_trace, cfg.max_trace - 1)
-    keep = s.n_trace < cfg.max_trace
-    trace = lax.dynamic_update_slice(
-        s.trace, jnp.where(keep, row, s.trace[idx])[None, :], (idx, jnp.int32(0)))
-    return s._replace(trace=trace, n_trace=s.n_trace + keep.astype(jnp.int32))
-
-
-def _start_stealing(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    """processor engine start_stealing(): pick victim, emit request event."""
-    v, rng_i, rr_i = _select_victim(cfg, cid, hops, scn, s, i)
-    d = _dist(cfg, cid, hops, scn, i, v)
-    return s._replace(
-        state=s.state.at[i].set(REQ_FLIGHT),
-        victim=s.victim.at[i].set(v),
-        ev_time=s.ev_time.at[i].set(t + d),
-        rng=s.rng.at[i].set(rng_i),
-        rr_aux=s.rr_aux.at[i].set(rr_i),
-    )
-
-
-def _do_idle(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    """idle event: processor i's running work is exhausted (paper idle())."""
-    state2 = s.state.at[i].set(REQ_FLIGHT)  # tentatively not-active
-    active_mask = state2 == ACTIVE
-    rem_active = jnp.sum(jnp.where(active_mask, s.idle_at - t, 0))
-    rem_flight = jnp.sum(jnp.where(state2 == ANS_FLIGHT, s.stolen, 0))
-    finished = (rem_active + rem_flight) == 0
-
-    s = s._replace(active_count=s.active_count - 1,
-                   idle_since=s.idle_since.at[i].set(t))
-    s = _log(cfg, s, t, i, EV_IDLE, 0)
-
-    def _finish(s: _State) -> _State:
-        # Account terminal idle time of every non-active processor.
-        idle_now = jnp.where(state2 == ACTIVE, 0, t - s.idle_since)
-        return s._replace(
-            done=jnp.bool_(True),
-            makespan=t,
-            ev_time=jnp.full((cfg.p,), INF32, jnp.int32),
-            total_idle=s.total_idle + jnp.sum(idle_now),
+    def init(self, arrays, scn: Scenario, core: eng.CoreState):
+        idle_at = core.idle_at.at[0].set(scn.W)
+        core = core._replace(
+            idle_at=idle_at,
+            ev_time=idle_at,      # everyone's first event is its idle event
+            executed=core.executed.at[0].set(scn.W),
         )
+        return core, ()
 
-    def _steal(s: _State) -> _State:
-        return _start_stealing(cfg, cid, hops, scn, s, i, t)
+    def is_done(self, arrays, core: eng.CoreState, ms, i, t):
+        """No remaining work anywhere: neither running nor in flight
+        (processor i's exhaustion is already reflected via state2)."""
+        state2 = core.state.at[i].set(REQ_FLIGHT)
+        rem_active = jnp.sum(jnp.where(state2 == ACTIVE, core.idle_at - t, 0))
+        rem_flight = jnp.sum(jnp.where(state2 == ANS_FLIGHT, core.stolen, 0))
+        return (rem_active + rem_flight) == 0
 
-    return lax.cond(finished, _finish, _steal, s)
+    def on_idle(self, arrays, cid, hops, scn, core, ms, i, t):
+        """idle event: processor i's running work is exhausted (paper idle())."""
+        state2 = core.state.at[i].set(REQ_FLIGHT)  # tentatively not-active
+        finished = self.is_done(arrays, core, ms, i, t)
 
+        core = eng.enter_idle(core, i, t)
+        core = eng.log(self, core, t, i, EV_IDLE, 0)
 
-def _do_req(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    """steal-request event: thief i's request reaches victim v
-    (paper answer_steal_request() + get_part_of_work_if_exist())."""
-    v = s.victim[i]
-    w_v = jnp.where(s.state[v] == ACTIVE, s.idle_at[v] - t, 0)
-    d_vi = _dist(cfg, cid, hops, scn, v, i)
-    thr = scn.theta_static + scn.theta_comm * d_vi
-    chan_free = jnp.bool_(cfg.mwt) | (t >= s.busy_until[v])
-    amt = w_v // 2
-    ok = (amt >= 1) & (w_v > thr) & chan_free
-    amt = jnp.where(ok, amt, 0)
+        def _finish(c: eng.CoreState) -> eng.CoreState:
+            # Account terminal idle time of every non-active processor.
+            idle_now = jnp.where(state2 == ACTIVE, 0, t - c.idle_since)
+            return eng.finish(self, c, t, idle_now)
 
-    new_idle_v = t + (w_v - amt)
-    s = s._replace(
-        idle_at=s.idle_at.at[v].set(jnp.where(ok, new_idle_v, s.idle_at[v])),
-        ev_time=s.ev_time.at[v].set(jnp.where(ok, new_idle_v, s.ev_time[v])),
-        executed=s.executed.at[v].add(-amt),
-        busy_until=s.busy_until.at[v].set(
-            jnp.where(ok, t + d_vi, s.busy_until[v])),
-        stolen=s.stolen.at[i].set(amt),
-        state=s.state.at[i].set(ANS_FLIGHT),
-        n_requests=s.n_requests + 1,
-        n_success=s.n_success + ok.astype(jnp.int32),
-        n_fail=s.n_fail + (~ok).astype(jnp.int32),
-    )
-    s = s._replace(ev_time=s.ev_time.at[i].set(t + d_vi))
-    return _log(cfg, s, t, i, jnp.where(ok, EV_REQ_OK, EV_REQ_FAIL), v)
+        def _steal(c: eng.CoreState) -> eng.CoreState:
+            return eng.start_stealing(self, cid, hops, scn, c, i, t)
 
+        return lax.cond(finished, _finish, _steal, core), ms
 
-def _do_ans(cfg, cid, hops, scn, s: _State, i, t) -> _State:
-    """steal-answer event: the (possibly empty) answer reaches thief i
-    (paper steal_answer())."""
-    amt = s.stolen[i]
-    ok = amt > 0
+    def on_request(self, arrays, cid, hops, scn, core, ms, i, t):
+        """steal-request event: thief i's request reaches victim v
+        (paper answer_steal_request() + get_part_of_work_if_exist())."""
+        v = core.victim[i]
+        w_v = jnp.where(core.state[v] == ACTIVE, core.idle_at[v] - t, 0)
+        d_vi = eng.dist(cid, hops, scn, v, i)
+        thr = eng.steal_threshold(scn, d_vi)
+        free = eng.chan_free(self, core, v, t)
+        amt = w_v // 2
+        ok = (amt >= 1) & (w_v > thr) & free
+        amt = jnp.where(ok, amt, 0)
 
-    def _got_work(s: _State) -> _State:
-        new_active = s.active_count + 1
-        first_full = (new_active == cfg.p) & (s.startup_end < 0)
-        s = s._replace(
-            state=s.state.at[i].set(ACTIVE),
-            idle_at=s.idle_at.at[i].set(t + amt),
-            ev_time=s.ev_time.at[i].set(t + amt),
-            stolen=s.stolen.at[i].set(0),
-            executed=s.executed.at[i].add(amt),
-            active_count=new_active,
-            total_idle=s.total_idle + (t - s.idle_since[i]),
-            startup_end=jnp.where(first_full, t, s.startup_end),
+        new_idle_v = t + (w_v - amt)
+        core = core._replace(
+            idle_at=core.idle_at.at[v].set(
+                jnp.where(ok, new_idle_v, core.idle_at[v])),
+            ev_time=core.ev_time.at[v].set(
+                jnp.where(ok, new_idle_v, core.ev_time[v])),
+            executed=core.executed.at[v].add(-amt),
         )
-        return _log(cfg, s, t, i, EV_ANS_OK, amt)
+        core = eng.deliver_answer(core, i, v, t, d_vi, ok, amt)
+        return eng.log(self, core, t, i,
+                       jnp.where(ok, EV_REQ_OK, EV_REQ_FAIL), v), ms
 
-    def _retry(s: _State) -> _State:
-        s = _start_stealing(cfg, cid, hops, scn, s, i, t)
-        return _log(cfg, s, t, i, EV_ANS_FAIL, s.victim[i])
+    def on_answer(self, arrays, cid, hops, scn, core, ms, i, t):
+        """steal-answer event: the (possibly empty) answer reaches thief i
+        (paper steal_answer())."""
+        amt = core.stolen[i]
+        ok = amt > 0
 
-    return lax.cond(ok, _got_work, _retry, s)
+        def _got_work(c: eng.CoreState) -> eng.CoreState:
+            c = eng.acquire_work(self, c, i, t, t + amt, amt, jnp.int32(0))
+            return eng.log(self, c, t, i, EV_ANS_OK, amt)
 
+        def _retry(c: eng.CoreState) -> eng.CoreState:
+            c = eng.start_stealing(self, cid, hops, scn, c, i, t)
+            return eng.log(self, c, t, i, EV_ANS_FAIL, c.victim[i])
 
-def _init_state(cfg: EngineConfig, scn: Scenario) -> _State:
-    p = cfg.p
-    idx = jnp.arange(p, dtype=jnp.uint32)
-    rng = jax.vmap(topo_mod.seed_state, in_axes=(None, 0))(scn.seed, idx)
-    idle_at = jnp.zeros((p,), jnp.int32).at[0].set(scn.W)
-    max_trace = max(cfg.max_trace, 1) if cfg.log_trace else 1
-    return _State(
-        t=jnp.int32(0),
-        state=jnp.full((p,), ACTIVE, jnp.int32),
-        idle_at=idle_at,
-        ev_time=idle_at,          # everyone's first event is its idle event
-        victim=jnp.zeros((p,), jnp.int32),
-        stolen=jnp.zeros((p,), jnp.int32),
-        busy_until=jnp.zeros((p,), jnp.int32),
-        rng=rng,
-        rr_aux=jnp.arange(p, dtype=jnp.int32),
-        idle_since=jnp.zeros((p,), jnp.int32),
-        executed=jnp.zeros((p,), jnp.int32).at[0].set(scn.W),
-        active_count=jnp.int32(p),
-        n_events=jnp.int32(0),
-        n_requests=jnp.int32(0),
-        n_success=jnp.int32(0),
-        n_fail=jnp.int32(0),
-        total_idle=jnp.int32(0),
-        startup_end=jnp.int32(-1),
-        makespan=jnp.int32(-1),
-        done=jnp.bool_(False),
-        trace=jnp.zeros((max_trace, 4), jnp.int32),
-        n_trace=jnp.int32(0),
-    )
+        return lax.cond(ok, _got_work, _retry, core), ms
 
-
-def _simulate(cfg: EngineConfig, scn: Scenario) -> SimResult:
-    return _simulate_impl(cfg, jnp.asarray(cfg.topology.cluster_id),
-                          jnp.asarray(cfg.topology.hops), scn)
-
-
-def _simulate_impl(cfg: EngineConfig, cid, hops, scn: Scenario) -> SimResult:
-    """Event loop with topology arrays passed explicitly (Pallas-friendly:
-    the kernel feeds cid/hops as inputs instead of closure constants)."""
-
-    def cond(s: _State):
-        return (~s.done) & (s.n_events < cfg.max_events)
-
-    def body(s: _State) -> _State:
-        i = jnp.argmin(s.ev_time).astype(jnp.int32)
-        t = s.ev_time[i]
-        s = s._replace(t=t, n_events=s.n_events + 1)
-        return lax.switch(
-            s.state[i],
-            [functools.partial(f, cfg, cid, hops, scn) for f in (_do_idle, _do_req, _do_ans)],
-            s, i, t)
-
-    s = lax.while_loop(cond, body, _init_state(cfg, scn))
-    return SimResult(
-        makespan=s.makespan,
-        n_events=s.n_events,
-        n_requests=s.n_requests,
-        n_success=s.n_success,
-        n_fail=s.n_fail,
-        total_idle=s.total_idle,
-        startup_end=s.startup_end,
-        executed=s.executed,
-        overflow=~s.done,
-        trace=s.trace,
-        n_trace=s.n_trace,
-    )
-
-
-@functools.lru_cache(maxsize=64)
-def _compiled_simulator(cfg: EngineConfig, batched: bool):
-    fn = functools.partial(_simulate, cfg)
-    if batched:
-        fn = jax.vmap(fn)
-    return jax.jit(fn)
+    def results(self, core: eng.CoreState, ms) -> SimResult:
+        return SimResult(
+            makespan=core.makespan,
+            n_events=core.n_events,
+            n_requests=core.n_requests,
+            n_success=core.n_success,
+            n_fail=core.n_fail,
+            total_idle=core.total_idle,
+            startup_end=core.startup_end,
+            executed=core.executed,
+            overflow=(~core.done) | core.halt,
+            trace=core.trace,
+            n_trace=core.n_trace,
+        )
 
 
 def simulate(cfg: EngineConfig, scn: Scenario) -> SimResult:
     """Run one simulation (jitted; cached per EngineConfig)."""
-    return _compiled_simulator(cfg, False)(scn)
+    return eng.simulate(DivisibleModel(cfg), scn)
 
 
 def simulate_batch(cfg: EngineConfig, scn: Scenario) -> SimResult:
     """Run a batch: every leaf of ``scn`` has a leading batch axis."""
-    return _compiled_simulator(cfg, True)(scn)
+    return eng.simulate_batch(DivisibleModel(cfg), scn)
 
 
 # ---------------------------------------------------------------------------
@@ -397,24 +172,3 @@ def default_max_events(W: int, p: int, lam: int) -> int:
     makespan_est = W / max(p, 1) + 16.0 * lam * max(np.log2(max(W, 2) / lam), 1.0)
     cycles = makespan_est / (2.0 * lam) + 8.0
     return int(min(12 * p * cycles + 64, 2**31 - 1))
-
-
-def batch_scenarios(W, seeds, lam=1, **kw) -> Scenario:
-    """Broadcast scalars against a seed vector into a batched Scenario."""
-    seeds = jnp.asarray(seeds, jnp.uint32)
-    n = seeds.shape[0]
-
-    def bcast(x, dtype):
-        x = jnp.asarray(x, dtype)
-        return jnp.broadcast_to(x, (n,)) if x.ndim == 0 else x
-
-    base = make_scenario(W, 0, lam=lam, **kw)
-    return Scenario(
-        W=bcast(base.W, jnp.int32),
-        seed=seeds,
-        lam_local=bcast(base.lam_local, jnp.int32),
-        lam_remote=bcast(base.lam_remote, jnp.int32),
-        theta_static=bcast(base.theta_static, jnp.int32),
-        theta_comm=bcast(base.theta_comm, jnp.int32),
-        remote_prob=bcast(base.remote_prob, jnp.uint32),
-    )

@@ -1,0 +1,426 @@
+"""Unified Work-Stealing discrete-event core (DESIGN.md §2).
+
+The paper's architecture is one event/processor engine parameterized by a
+pluggable *task engine* (§2.1, §3). This module is that engine: every piece
+of machinery that is independent of the task model lives here —
+
+* the one-pending-event-per-processor state (:class:`CoreState`): the global
+  event heap of the serial simulator collapses to ``argmin(ev_time)`` over a
+  dense int32 vector, which vectorizes on the VPU and vmaps across scenarios;
+* the three-state processor machine (``ACTIVE`` / ``REQ_FLIGHT`` /
+  ``ANS_FLIGHT``) and the event dispatch ``lax.switch`` on it;
+* SWT/MWT answer-channel policy (:func:`chan_free`, paper §2.4.1) and the
+  bookkeeping shared by every steal answer (:func:`deliver_answer`);
+* victim-selection dispatch over the topology strategies (§2.3/§3.3) and the
+  per-processor xorshift32 PRNG lanes;
+* trace logging (the log engine, §3.5) and result accumulation (event,
+  request, success/fail, idle-time and startup counters).
+
+A *task model* supplies what the paper calls the task engine: how work is
+represented, surrendered to a thief, and detected as exhausted. It is a
+hashable (frozen-dataclass) object implementing:
+
+``static_arrays()``
+    per-model constant arrays (e.g. DAG durations/edges) threaded explicitly
+    so the Pallas kernel can feed them as refs instead of closure constants;
+``init(arrays, scn, core) -> (core, ms)``
+    patch the freshly built :class:`CoreState` and build the model-state
+    pytree ``ms`` (deques, task pools, predecessor counts, ...);
+``on_idle / on_request / on_answer (arrays, cid, hops, scn, core, ms, i, t)``
+    the three event handlers, each returning ``(core, ms)``;
+``is_done(arrays, core, ms, i, t)``
+    the termination predicate, used by the model's ``on_idle``;
+``results(core, ms)``
+    fold the final state into the model's public result NamedTuple.
+
+The concrete models are ``divisible.DivisibleModel``, ``dag.DagModel`` and
+``adaptive.AdaptiveModel``; each is bit-exact against its serial numpy twin
+in ``repro.core.oracle``. Because handlers are plain traced JAX, the same
+``_simulate_impl`` body runs as ordinary jit/vmap code, sharded SPMD over a
+mesh (``sweep.simulate_sharded``), or inside the Pallas kernel
+(``kernels.ws_sim``) with all state VMEM-resident.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import topology as topo_mod
+from repro.core.topology import Topology
+
+INF32 = np.int32(2**31 - 1)
+
+# Processor states (values are the lax.switch branch index).
+ACTIVE = 0
+REQ_FLIGHT = 1
+ANS_FLIGHT = 2
+
+# Trace event kinds (log engine).
+EV_IDLE = 0          # aux = 0
+EV_REQ_FAIL = 1      # aux = victim
+EV_REQ_OK = 2        # aux = victim (stolen amount recoverable from ANS_OK)
+EV_ANS_FAIL = 3      # aux = next victim chosen
+EV_ANS_OK = 4        # aux = stolen amount
+
+
+class Scenario(NamedTuple):
+    """Dynamic (traced, vmappable) per-simulation parameters.
+
+    Shared by every task model; ``W`` is the divisible/adaptive workload and
+    is ignored by DAG scenarios (the DAG itself is static configuration).
+    """
+    W: jnp.ndarray            # int32 total unit tasks
+    seed: jnp.ndarray         # uint32 scenario seed
+    lam_local: jnp.ndarray    # int32 intra-cluster delay
+    lam_remote: jnp.ndarray   # int32 per-hop inter-cluster delay
+    theta_static: jnp.ndarray  # int32 steal-threshold constant
+    theta_comm: jnp.ndarray    # int32 steal-threshold per unit of distance
+    remote_prob: jnp.ndarray   # uint32 fixed-point P(remote) for LOCAL_FIRST
+
+
+def make_scenario(W, seed, lam=1, lam_local=None, lam_remote=None,
+                  theta_static=0, theta_comm=0, remote_prob=0.25) -> Scenario:
+    """Convenience constructor. ``lam`` sets both latencies (one-cluster use)."""
+    ll = lam if lam_local is None else lam_local
+    lr = lam if lam_remote is None else lam_remote
+    return Scenario(
+        W=jnp.asarray(W, jnp.int32),
+        seed=jnp.asarray(seed, jnp.uint32),
+        lam_local=jnp.asarray(ll, jnp.int32),
+        lam_remote=jnp.asarray(lr, jnp.int32),
+        theta_static=jnp.asarray(theta_static, jnp.int32),
+        theta_comm=jnp.asarray(theta_comm, jnp.int32),
+        remote_prob=jnp.asarray(topo_mod.remote_prob_u32(remote_prob), jnp.uint32),
+    )
+
+
+def batch_scenarios(W, seeds, lam=1, **kw) -> Scenario:
+    """Broadcast scalars against a seed vector into a batched Scenario."""
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    n = seeds.shape[0]
+
+    def bcast(x, dtype):
+        x = jnp.asarray(x, dtype)
+        return jnp.broadcast_to(x, (n,)) if x.ndim == 0 else x
+
+    base = make_scenario(W, 0, lam=lam, **kw)
+    return Scenario(
+        W=bcast(base.W, jnp.int32),
+        seed=seeds,
+        lam_local=bcast(base.lam_local, jnp.int32),
+        lam_remote=bcast(base.lam_remote, jnp.int32),
+        theta_static=bcast(base.theta_static, jnp.int32),
+        theta_comm=bcast(base.theta_comm, jnp.int32),
+        remote_prob=bcast(base.remote_prob, jnp.uint32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static compile-time configuration shared by every task model."""
+    topology: Topology
+    mwt: bool = False                 # multiple work transfers (paper §2.4.1)
+    max_events: int = 1 << 20
+    log_trace: bool = False
+    max_trace: int = 0                # rows kept when log_trace
+
+    @property
+    def p(self) -> int:
+        return self.topology.p
+
+
+class CoreState(NamedTuple):
+    """Model-independent engine state (one pending event per processor)."""
+    t: jnp.ndarray
+    state: jnp.ndarray        # int32[p] ACTIVE / REQ_FLIGHT / ANS_FLIGHT
+    idle_at: jnp.ndarray      # int32[p] completion time of running work
+    ev_time: jnp.ndarray      # int32[p] the pending event per processor
+    victim: jnp.ndarray       # int32[p]
+    stolen: jnp.ndarray       # int32[p] in-flight payload (model-defined)
+    busy_until: jnp.ndarray   # int32[p] SWT answer-channel horizon
+    rng: jnp.ndarray          # uint32[p] xorshift32 lanes
+    rr_aux: jnp.ndarray       # int32[p] round-robin cursor
+    idle_since: jnp.ndarray   # int32[p]
+    executed: jnp.ndarray     # int32[p] work executed per processor
+    active_count: jnp.ndarray
+    n_events: jnp.ndarray
+    n_requests: jnp.ndarray
+    n_success: jnp.ndarray
+    n_fail: jnp.ndarray
+    total_idle: jnp.ndarray
+    startup_end: jnp.ndarray  # first time all p procs active (-1: never)
+    makespan: jnp.ndarray
+    done: jnp.ndarray
+    halt: jnp.ndarray         # model-signaled abnormal stop (capacity overflow)
+    trace: jnp.ndarray        # int32[max_trace, 4] (t, proc, kind, aux)
+    n_trace: jnp.ndarray
+
+
+class TaskModel:
+    """Base class for task models: forwards static config from ``self.cfg``.
+
+    Subclasses are frozen dataclasses with a single ``cfg`` field (hashable,
+    so compiled simulators cache per model) implementing the hook methods
+    documented in the module docstring.
+    """
+
+    @property
+    def topology(self) -> Topology:
+        return self.cfg.topology
+
+    @property
+    def p(self) -> int:
+        return self.cfg.topology.p
+
+    @property
+    def mwt(self) -> bool:
+        return self.cfg.mwt
+
+    @property
+    def max_events(self) -> int:
+        return self.cfg.max_events
+
+    @property
+    def log_trace(self) -> bool:
+        return getattr(self.cfg, "log_trace", False)
+
+    @property
+    def max_trace(self) -> int:
+        return getattr(self.cfg, "max_trace", 0)
+
+    def static_arrays(self) -> Tuple[jnp.ndarray, ...]:
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# Shared machinery: distance, victim selection, stealing, answers, logging.
+# ---------------------------------------------------------------------------
+
+def dist(cid, hops, scn: Scenario, i, j):
+    """Scalar distance d(i, j) under the scenario's latency scalars."""
+    same = cid[i] == cid[j]
+    d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i, j])
+    return jnp.where(i == j, jnp.int32(0), d).astype(jnp.int32)
+
+
+def select_victim(strategy: int, p: int, cid, hops, scn: Scenario,
+                  rng_i, rr_i, i):
+    """Victim selection (topology engine §3.3); returns (victim, rng', rr')."""
+    if strategy == topo_mod.UNIFORM:
+        rng_i = topo_mod.xorshift32(rng_i)
+        v = (rng_i % jnp.uint32(p - 1)).astype(jnp.int32)
+        v = v + (v >= i).astype(jnp.int32)
+        return v, rng_i, rr_i
+    if strategy == topo_mod.LOCAL_FIRST:
+        rng_i = topo_mod.xorshift32(rng_i)
+        go_remote = rng_i < scn.remote_prob
+        rng_i = topo_mod.xorshift32(rng_i)
+        my = cid[i]
+        idx = jnp.arange(p, dtype=jnp.int32)
+        local_mask = (cid == my) & (idx != i)
+        remote_mask = cid != my
+        mask = jnp.where(go_remote, remote_mask, local_mask)
+        n = jnp.maximum(mask.sum().astype(jnp.uint32), jnp.uint32(1))
+        k = (rng_i % n).astype(jnp.int32)
+        csum = jnp.cumsum(mask.astype(jnp.int32))
+        v = jnp.argmax(csum > k).astype(jnp.int32)
+        v = jnp.where(v == i, (i + 1) % p, v)  # only if both masks empty
+        return v, rng_i, rr_i
+    if strategy == topo_mod.INV_DISTANCE:
+        idx = jnp.arange(p, dtype=jnp.int32)
+        same = cid == cid[i]
+        d = jnp.where(same, scn.lam_local, scn.lam_remote * hops[i]).astype(jnp.float32)
+        w = jnp.where(idx == i, 0.0, 1.0 / jnp.maximum(d, 1.0))
+        c = jnp.cumsum(w)
+        rng_i = topo_mod.xorshift32(rng_i)
+        u = (rng_i.astype(jnp.float32) / jnp.float32(2**32)) * c[-1]
+        v = jnp.argmax(c > u).astype(jnp.int32)
+        v = jnp.where(v == i, (i + 1) % p, v)
+        return v, rng_i, rr_i
+    if strategy == topo_mod.ROUND_ROBIN:
+        nxt = (rr_i + 1) % jnp.int32(p)
+        nxt = jnp.where(nxt == i, (nxt + 1) % jnp.int32(p), nxt)
+        return nxt, rng_i, nxt
+    raise ValueError(f"unknown strategy {strategy}")
+
+
+def start_stealing(model: TaskModel, cid, hops, scn: Scenario,
+                   core: CoreState, i, t) -> CoreState:
+    """processor engine start_stealing(): pick victim, emit request event."""
+    v, rng_i, rr_i = select_victim(model.topology.strategy, model.p, cid, hops,
+                                   scn, core.rng[i], core.rr_aux[i], i)
+    d = dist(cid, hops, scn, i, v)
+    return core._replace(
+        state=core.state.at[i].set(REQ_FLIGHT),
+        victim=core.victim.at[i].set(v),
+        ev_time=core.ev_time.at[i].set(t + d),
+        rng=core.rng.at[i].set(rng_i),
+        rr_aux=core.rr_aux.at[i].set(rr_i),
+    )
+
+
+def enter_idle(core: CoreState, i, t) -> CoreState:
+    """Bookkeeping when processor i runs out of work (before it steals)."""
+    return core._replace(active_count=core.active_count - 1,
+                         idle_since=core.idle_since.at[i].set(t))
+
+
+def chan_free(model: TaskModel, core: CoreState, v, t):
+    """SWT/MWT answer-channel policy (paper §2.4.1): under SWT a victim
+    refuses while a previous answer is still in flight."""
+    return jnp.bool_(model.mwt) | (t >= core.busy_until[v])
+
+
+def steal_threshold(scn: Scenario, d_vi):
+    """Steal threshold of §2.4.2: θ_static + θ_comm · d(v, i)."""
+    return scn.theta_static + scn.theta_comm * d_vi
+
+
+def deliver_answer(core: CoreState, i, v, t, d_vi, ok, payload) -> CoreState:
+    """Answer bookkeeping shared by every model's on_request: occupy the
+    victim's answer channel on success, put ``payload`` in flight toward the
+    thief, and account the request."""
+    return core._replace(
+        busy_until=core.busy_until.at[v].set(
+            jnp.where(ok, t + d_vi, core.busy_until[v])),
+        stolen=core.stolen.at[i].set(payload),
+        state=core.state.at[i].set(ANS_FLIGHT),
+        ev_time=core.ev_time.at[i].set(t + d_vi),
+        n_requests=core.n_requests + 1,
+        n_success=core.n_success + ok.astype(jnp.int32),
+        n_fail=core.n_fail + (~ok).astype(jnp.int32),
+    )
+
+
+def acquire_work(model: TaskModel, core: CoreState, i, t, end, exec_add,
+                 stolen_reset) -> CoreState:
+    """Thief i becomes ACTIVE until ``end``: shared part of every model's
+    successful on_answer (idle-time and startup accounting)."""
+    new_active = core.active_count + 1
+    first_full = (new_active == model.p) & (core.startup_end < 0)
+    return core._replace(
+        state=core.state.at[i].set(ACTIVE),
+        idle_at=core.idle_at.at[i].set(end),
+        ev_time=core.ev_time.at[i].set(end),
+        stolen=core.stolen.at[i].set(stolen_reset),
+        executed=core.executed.at[i].add(exec_add),
+        active_count=new_active,
+        total_idle=core.total_idle + (t - core.idle_since[i]),
+        startup_end=jnp.where(first_full, t, core.startup_end),
+    )
+
+
+def finish(model: TaskModel, core: CoreState, t, idle_now) -> CoreState:
+    """Terminate: freeze the event vector and account terminal idle time
+    (``idle_now`` is the model's int32[p] per-processor idle contribution)."""
+    return core._replace(
+        done=jnp.bool_(True),
+        makespan=t,
+        ev_time=jnp.full((model.p,), INF32, jnp.int32),
+        total_idle=core.total_idle + jnp.sum(idle_now),
+    )
+
+
+def log(model: TaskModel, core: CoreState, t, proc, kind, aux) -> CoreState:
+    """Append one row to the trace ring (log engine); no-op when disabled."""
+    if not model.log_trace:
+        return core
+    row = jnp.stack([t, proc, jnp.int32(kind), jnp.asarray(aux, jnp.int32)])
+    idx = jnp.minimum(core.n_trace, model.max_trace - 1)
+    keep = core.n_trace < model.max_trace
+    trace = lax.dynamic_update_slice(
+        core.trace, jnp.where(keep, row, core.trace[idx])[None, :],
+        (idx, jnp.int32(0)))
+    return core._replace(trace=trace,
+                         n_trace=core.n_trace + keep.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# The event loop.
+# ---------------------------------------------------------------------------
+
+def init_core(model: TaskModel, scn: Scenario) -> CoreState:
+    """Generic initial state; the model patches proc 0 (all work starts
+    there) and its own payload conventions in ``init``."""
+    p = model.p
+    idx = jnp.arange(p, dtype=jnp.uint32)
+    rng = jax.vmap(topo_mod.seed_state, in_axes=(None, 0))(scn.seed, idx)
+    max_trace = max(model.max_trace, 1) if model.log_trace else 1
+    return CoreState(
+        t=jnp.int32(0),
+        state=jnp.full((p,), ACTIVE, jnp.int32),
+        idle_at=jnp.zeros((p,), jnp.int32),
+        ev_time=jnp.zeros((p,), jnp.int32),
+        victim=jnp.zeros((p,), jnp.int32),
+        stolen=jnp.zeros((p,), jnp.int32),
+        busy_until=jnp.zeros((p,), jnp.int32),
+        rng=rng,
+        rr_aux=jnp.arange(p, dtype=jnp.int32),
+        idle_since=jnp.zeros((p,), jnp.int32),
+        executed=jnp.zeros((p,), jnp.int32),
+        active_count=jnp.int32(p),
+        n_events=jnp.int32(0),
+        n_requests=jnp.int32(0),
+        n_success=jnp.int32(0),
+        n_fail=jnp.int32(0),
+        total_idle=jnp.int32(0),
+        startup_end=jnp.int32(-1),
+        makespan=jnp.int32(-1),
+        done=jnp.bool_(False),
+        halt=jnp.bool_(False),
+        trace=jnp.zeros((max_trace, 4), jnp.int32),
+        n_trace=jnp.int32(0),
+    )
+
+
+def _simulate_impl(model: TaskModel, cid, hops, arrays, scn: Scenario):
+    """Event loop with every array input passed explicitly (Pallas-friendly:
+    the kernel feeds cid/hops/model arrays as refs, not closure constants)."""
+    core, ms = model.init(arrays, scn, init_core(model, scn))
+
+    handlers = [functools.partial(h, arrays, cid, hops, scn)
+                for h in (model.on_idle, model.on_request, model.on_answer)]
+
+    def cond(s):
+        c = s[0]
+        return (~c.done) & (c.n_events < model.max_events) & (~c.halt)
+
+    def body(s):
+        c, m = s
+        i = jnp.argmin(c.ev_time).astype(jnp.int32)
+        t = c.ev_time[i]
+        c = c._replace(t=t, n_events=c.n_events + 1)
+        return lax.switch(c.state[i], handlers, c, m, i, t)
+
+    core, ms = lax.while_loop(cond, body, (core, ms))
+    return model.results(core, ms)
+
+
+def _simulate(model: TaskModel, scn: Scenario):
+    return _simulate_impl(model, jnp.asarray(model.topology.cluster_id),
+                          jnp.asarray(model.topology.hops),
+                          model.static_arrays(), scn)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_simulator(model: TaskModel, batched: bool):
+    fn = functools.partial(_simulate, model)
+    if batched:
+        fn = jax.vmap(fn)
+    return jax.jit(fn)
+
+
+def simulate(model: TaskModel, scn: Scenario):
+    """Run one simulation (jitted; cached per model object)."""
+    return _compiled_simulator(model, False)(scn)
+
+
+def simulate_batch(model: TaskModel, scn: Scenario):
+    """Run a batch: every leaf of ``scn`` has a leading batch axis."""
+    return _compiled_simulator(model, True)(scn)

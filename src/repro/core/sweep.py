@@ -2,29 +2,94 @@
 
 The paper's simulator engine runs "several scenarios and simulation in the
 same time". Here that is: build one batched Scenario per processor count
-(shapes are static in p), ``vmap`` the event engine over the whole
-(W, λ, θ, rep) cross product, and optionally shard the batch axis over a JAX
-mesh — on a 512-chip fleet a full paper sweep runs as a single SPMD program.
+(shapes are static in p), ``vmap`` the unified event core over the whole
+(W, λ, θ, rep) cross product for ANY task model (divisible, DAG, adaptive),
+and optionally shard the batch axis over a JAX mesh — on a 512-chip fleet a
+full paper sweep runs as a single SPMD program (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterable, Optional, Sequence
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import adaptive as ad
 from repro.core import divisible
+from repro.core import dag as dg
+from repro.core import engine as eng
 from repro.core.divisible import EngineConfig, Scenario, SimResult
 from repro.core.topology import Topology, one_cluster
+
+#: Scenario-level columns shared by every task model's result type.
+_CORE_FIELDS = ("makespan", "n_requests", "n_success", "n_fail",
+                "total_idle", "startup_end", "overflow")
+
+
+def make_model(task_model: Union[str, eng.TaskModel] = "divisible", *,
+               topology: Topology, mwt: bool = False,
+               max_events: int = 1 << 20, log_trace: bool = False,
+               max_trace: int = 0, dag=None, owner_lifo: bool = True,
+               deque_cap: Optional[int] = None, merge_alpha: int = 1,
+               merge_beta_num: int = 0, merge_beta_den: int = 16,
+               pool_cap: int = 4096) -> eng.TaskModel:
+    """Task-model factory: name -> configured TaskModel.
+
+    ``task_model`` may also be an existing TaskModel/config (passed through /
+    wrapped after checking it was built for ``topology``), so callers can
+    hand sweeps either a name+kwargs or a prebuilt model.
+    """
+    if not isinstance(task_model, str):
+        model = as_model(task_model)
+        if model.topology != topology:
+            raise ValueError("prebuilt task_model topology differs from "
+                             "topology=")
+        return model
+    if task_model == "divisible":
+        return divisible.DivisibleModel(EngineConfig(
+            topology=topology, mwt=mwt, max_events=max_events,
+            log_trace=log_trace, max_trace=max_trace))
+    if task_model == "dag":
+        if dag is None:
+            raise ValueError("task_model='dag' requires dag=TaskDag(...)")
+        return dg.DagModel(dg.DagEngineConfig(
+            topology=topology, dag=dag, mwt=mwt, owner_lifo=owner_lifo,
+            deque_cap=deque_cap, max_events=max_events,
+            log_trace=log_trace, max_trace=max_trace))
+    if task_model == "adaptive":
+        return ad.AdaptiveModel(ad.AdaptiveEngineConfig(
+            topology=topology, mwt=mwt, merge_alpha=merge_alpha,
+            merge_beta_num=merge_beta_num, merge_beta_den=merge_beta_den,
+            pool_cap=pool_cap,
+            deque_cap=256 if deque_cap is None else deque_cap,
+            max_events=max_events, log_trace=log_trace, max_trace=max_trace))
+    raise ValueError(f"unknown task model {task_model!r}")
+
+
+def as_model(m) -> eng.TaskModel:
+    """Accept a TaskModel or any engine config and return a TaskModel."""
+    if isinstance(m, EngineConfig):
+        return divisible.DivisibleModel(m)
+    if isinstance(m, dg.DagEngineConfig):
+        return dg.DagModel(m)
+    if isinstance(m, ad.AdaptiveEngineConfig):
+        return ad.AdaptiveModel(m)
+    if isinstance(m, eng.TaskModel):
+        return m
+    raise TypeError(f"not a task model or engine config: {type(m)!r}")
 
 
 @dataclasses.dataclass
 class GridResult:
-    """Flat record-of-arrays over every (W, lam, theta, rep) cell for one p."""
+    """Flat record-of-arrays over every (W, lam, theta, rep) cell for one p.
+
+    ``extras`` holds model-specific per-cell columns (e.g. ``n_splits`` for
+    adaptive sweeps, ``n_completed`` for DAG sweeps, per-proc ``executed``).
+    """
     p: int
     W: np.ndarray
     lam: np.ndarray
@@ -38,6 +103,7 @@ class GridResult:
     total_idle: np.ndarray
     startup_end: np.ndarray
     overflow: np.ndarray
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     def __len__(self):
         return int(self.makespan.shape[0])
@@ -73,32 +139,59 @@ def build_batch(
 
 def run_grid(
     topo: Topology,
-    W_list: Sequence[int],
-    lam_list: Sequence[int],
-    reps: int,
+    W_list: Sequence[int] = (0,),
+    lam_list: Sequence[int] = (1,),
+    reps: int = 1,
     theta: Sequence[tuple] = ((0, 0),),
     mwt: bool = False,
     max_events: Optional[int] = None,
     mesh: Optional[Mesh] = None,
     shard_axes: Sequence[str] = ("data",),
     seed0: int = 1,
+    task_model: Union[str, eng.TaskModel] = "divisible",
+    **model_kw,
 ) -> GridResult:
-    """Simulate the full (W × λ × θ × reps) grid on topology ``topo``."""
-    if max_events is None:
-        max_events = max(
-            divisible.default_max_events(int(w), topo.p, int(l))
-            for w in W_list for l in lam_list)
-    cfg = EngineConfig(topology=topo, mwt=mwt, max_events=max_events)
+    """Simulate the full (W × λ × θ × reps) grid on topology ``topo``.
+
+    ``task_model`` selects the task engine ("divisible" | "dag" | "adaptive",
+    or a prebuilt TaskModel); ``model_kw`` is forwarded to
+    :func:`make_model` (e.g. ``dag=``, ``merge_alpha=``). For DAG sweeps the
+    workload is the static DAG, so ``W_list`` is typically left at ``(0,)``
+    and the grid sweeps latency/threshold/rep only. A prebuilt model carries
+    its own static config, so ``mwt``/``max_events``/``model_kw`` must be
+    left at their defaults and its topology must equal ``topo``.
+    """
+    if not isinstance(task_model, str):
+        model = as_model(task_model)
+        if mwt or max_events is not None or model_kw:
+            raise ValueError(
+                "prebuilt task_model carries its own config; mwt/max_events/"
+                f"model kwargs {sorted(model_kw)} would be ignored")
+        if model.topology != topo:
+            raise ValueError("prebuilt task_model topology differs from topo")
+    else:
+        if max_events is None:
+            dagf = model_kw.get("dag")
+            W_eff = [dagf.total_work] if (task_model == "dag" and dagf is not None) \
+                else [int(w) for w in W_list]
+            max_events = max(
+                divisible.default_max_events(int(w), topo.p, int(l))
+                for w in W_eff for l in lam_list)
+        model = make_model(task_model, topology=topo, mwt=mwt,
+                           max_events=max_events, **model_kw)
     scn = build_batch(W_list, lam_list, reps, theta, seed0=seed0)
 
     if mesh is not None:
-        res = simulate_sharded(cfg, scn, mesh, shard_axes)
+        res = simulate_sharded(model, scn, mesh, shard_axes)
     else:
-        res = divisible.simulate_batch(cfg, scn)
+        res = eng.simulate_batch(model, scn)
 
     res = jax.tree.map(np.asarray, res)
+    extras = {k: v for k, v in res._asdict().items()
+              if k in res._fields and k not in _CORE_FIELDS
+              and k not in ("trace", "n_trace")}
     return GridResult(
-        p=topo.p,
+        p=model.p,
         W=np.asarray(scn.W),
         lam=np.asarray(scn.lam_local),
         theta_static=np.asarray(scn.theta_static),
@@ -111,17 +204,21 @@ def run_grid(
         total_idle=res.total_idle,
         startup_end=res.startup_end,
         overflow=res.overflow,
+        extras=extras,
     )
 
 
-def simulate_sharded(cfg: EngineConfig, scn: Scenario, mesh: Mesh,
-                     shard_axes: Sequence[str] = ("data",)) -> SimResult:
+def simulate_sharded(model, scn: Scenario, mesh: Mesh,
+                     shard_axes: Sequence[str] = ("data",)):
     """Shard the scenario batch axis over ``mesh`` axes and run SPMD.
 
-    Pads the batch to a multiple of the shard extent (padded rows simulate
-    W=1 and are dropped). This is how the Monte-Carlo workload of the paper
-    maps to a multi-pod fleet.
+    Works for any task model (``model`` may also be a bare engine config).
+    Pads the batch to a multiple of the shard extent; padded rows simulate
+    W=1 (divisible/adaptive terminate immediately; DAG pad rows rerun the
+    static DAG under a dummy seed) and are dropped. This is how the
+    Monte-Carlo workload of the paper maps to a multi-pod fleet.
     """
+    model = as_model(model)
     extent = int(np.prod([mesh.shape[a] for a in shard_axes]))
     n = int(scn.W.shape[0])
     pad = (-n) % extent
@@ -135,15 +232,16 @@ def simulate_sharded(cfg: EngineConfig, scn: Scenario, mesh: Mesh,
     scn_p = jax.tree.map(pad_leaf, scn)
     sharding = NamedSharding(mesh, P(tuple(shard_axes)))
     scn_p = jax.tree.map(lambda x: jax.device_put(x, sharding), scn_p)
-    out = divisible.simulate_batch(cfg, scn_p)
+    out = eng.simulate_batch(model, scn_p)
     if pad:
         out = jax.tree.map(lambda x: x[:n], out)
     return out
 
 
-def lower_sharded_sweep(cfg: EngineConfig, batch: int, mesh: Mesh,
+def lower_sharded_sweep(model, batch: int, mesh: Mesh,
                         shard_axes: Sequence[str] = ("data",)):
     """Lower (no execution) the sharded sweep for dry-run/roofline analysis."""
+    model = as_model(model)
     sharding = NamedSharding(mesh, P(tuple(shard_axes)))
 
     def specs(dtype):
@@ -155,7 +253,7 @@ def lower_sharded_sweep(cfg: EngineConfig, batch: int, mesh: Mesh,
         theta_static=specs(jnp.int32), theta_comm=specs(jnp.int32),
         remote_prob=specs(jnp.uint32),
     )
-    fn = jax.jit(jax.vmap(lambda s: divisible._simulate(cfg, s)))
+    fn = jax.jit(jax.vmap(lambda s: eng._simulate(model, s)))
     return fn.lower(scn)
 
 

@@ -1,18 +1,22 @@
 """Pallas kernel: batched Work-Stealing simulations, one scenario per grid
-cell — the paper-representative hot spot (DESIGN.md §2).
+cell — the paper-representative hot spot (DESIGN.md §2, §4).
 
-The divisible-load event machine keeps O(p) int32 state (event times,
-processor states, PRNG lanes). Running a Monte-Carlo sweep as ordinary JAX
-re-reads that state from HBM on every event; here the *entire* per-scenario
-state lives in VMEM/registers for the whole event loop (~p·6·4 bytes ≈ a few
-KiB per scenario), so HBM is touched exactly twice: scenario parameters in,
-results out. The event loop body is the same traced code as the library
-engine (``repro.core.divisible._simulate``), so the kernel is bit-identical
-to the oracle-validated engine by construction.
+The unified event core keeps O(p) int32 state (event times, processor
+states, PRNG lanes) plus the task model's pytree (deques, task pools).
+Running a Monte-Carlo sweep as ordinary JAX re-reads that state from HBM on
+every event; here the *entire* per-scenario state lives in VMEM/registers
+for the whole event loop, so HBM is touched exactly twice: scenario
+parameters in, results out. The event loop body is the same traced code as
+the library engine (``repro.core.engine._simulate_impl``), so the kernel is
+bit-identical to the oracle-validated engine by construction — for EVERY
+task model (divisible, DAG, adaptive), not just the divisible hot path.
 
 Grid: ``(G,)`` scenarios; BlockSpecs give each cell one scenario row of each
-parameter vector and one row of each result vector. Validated in interpret
-mode on CPU; on a real TPU the same call compiles via Mosaic (the body is
+parameter vector and one row of each result leaf. The wrapper is fully
+generic: it derives the output pytree via ``jax.eval_shape`` on the model's
+result type and threads the model's static arrays (DAG durations/edges) as
+kernel inputs rather than closure constants. Validated in interpret mode on
+CPU; on a real TPU the same call compiles via Mosaic (the body is
 argmin/compare/select vector ops over int32 lanes — all VPU-friendly).
 """
 from __future__ import annotations
@@ -23,75 +27,72 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import divisible as dv
+from repro.core import engine as eng
+from repro.core.sweep import as_model
 
 
-def _kernel(cid_ref, hops_ref, W_ref, seed_ref, ll_ref, lr_ref, ts_ref,
-            tc_ref, rp_ref,
-            makespan_ref, nev_ref, nreq_ref, nsucc_ref, nfail_ref,
-            idle_ref, startup_ref, executed_ref, overflow_ref, *,
-            cfg: dv.EngineConfig):
-    scn = dv.Scenario(
-        W=W_ref[0], seed=seed_ref[0], lam_local=ll_ref[0], lam_remote=lr_ref[0],
-        theta_static=ts_ref[0], theta_comm=tc_ref[0], remote_prob=rp_ref[0])
-    res = dv._simulate_impl(cfg, cid_ref[...], hops_ref[...], scn)
-    makespan_ref[0] = res.makespan
-    nev_ref[0] = res.n_events
-    nreq_ref[0] = res.n_requests
-    nsucc_ref[0] = res.n_success
-    nfail_ref[0] = res.n_fail
-    idle_ref[0] = res.total_idle
-    startup_ref[0] = res.startup_end
-    executed_ref[0, :] = res.executed
-    overflow_ref[0] = res.overflow.astype(jnp.int32)
+def _kernel(*refs, model, n_const, n_scn, scn_def, bool_mask):
+    consts = [refs[k][...] for k in range(n_const)]
+    scn = jax.tree.unflatten(
+        scn_def, [refs[n_const + k][0] for k in range(n_scn)])
+    res = eng._simulate_impl(model, consts[0], consts[1],
+                             tuple(consts[2:]), scn)
+    out_refs = refs[n_const + n_scn:]
+    for leaf, ref, is_bool in zip(jax.tree.leaves(res), out_refs, bool_mask):
+        val = leaf.astype(jnp.int32) if is_bool else leaf
+        ref[(0,) + (slice(None),) * leaf.ndim] = val
 
 
-def ws_sim_pallas(cfg: dv.EngineConfig, scn: dv.Scenario,
-                  interpret: bool = True):
+def ws_sim_pallas(model, scn: eng.Scenario, interpret: bool = True):
     """Batched simulation; ``scn`` leaves have leading batch dim G.
 
-    Returns the same fields as ``dv.SimResult`` (trace logging unsupported
-    in-kernel; ``cfg.log_trace`` must be False).
+    ``model`` is a TaskModel or any engine config (``EngineConfig`` /
+    ``DagEngineConfig`` / ``AdaptiveEngineConfig``). Returns the model's
+    result NamedTuple with a leading G axis on every leaf — bit-identical
+    to ``engine.simulate_batch``.
     """
-    assert not cfg.log_trace, "trace logging not supported in the kernel"
+    model = as_model(model)
     G = int(scn.W.shape[0])
-    p = cfg.p
+
+    consts = (jnp.asarray(model.topology.cluster_id),
+              jnp.asarray(model.topology.hops)) + tuple(model.static_arrays())
+    scn_leaves, scn_def = jax.tree.flatten(scn)
+
+    scn1 = jax.tree.unflatten(
+        scn_def, [jax.ShapeDtypeStruct((), l.dtype) for l in scn_leaves])
+    res_struct = jax.eval_shape(
+        lambda s: eng._simulate_impl(model, consts[0], consts[1],
+                                     consts[2:], s), scn1)
+    res_leaves, res_def = jax.tree.flatten(res_struct)
+    bool_mask = [l.dtype == jnp.bool_ for l in res_leaves]
+
+    def _block(shape):
+        rank = len(shape)
+        return pl.BlockSpec((1,) + tuple(shape),
+                            lambda i, rank=rank: (i,) + (0,) * rank)
+
+    def _const_spec(x):
+        rank = x.ndim
+        return pl.BlockSpec(x.shape, lambda i, rank=rank: (0,) * rank)
 
     scalar_spec = pl.BlockSpec((1,), lambda i: (i,))
-    out_shapes = [
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # makespan
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_events
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_requests
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_success
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # n_fail
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # total_idle
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # startup_end
-        jax.ShapeDtypeStruct((G, p), jnp.int32),  # executed
-        jax.ShapeDtypeStruct((G,), jnp.int32),   # overflow
-    ]
-    out_specs = [scalar_spec] * 7 + [pl.BlockSpec((1, p), lambda i: (i, 0)),
-                                     scalar_spec]
+    in_specs = ([_const_spec(c) for c in consts]
+                + [scalar_spec] * len(scn_leaves))
+    out_shape = [jax.ShapeDtypeStruct((G,) + tuple(l.shape),
+                                      jnp.int32 if b else l.dtype)
+                 for l, b in zip(res_leaves, bool_mask)]
+    out_specs = [_block(l.shape) for l in res_leaves]
 
-    cid = jnp.asarray(cfg.topology.cluster_id)
-    hops = jnp.asarray(cfg.topology.hops)
     outs = pl.pallas_call(
-        functools.partial(_kernel, cfg=cfg),
+        functools.partial(_kernel, model=model, n_const=len(consts),
+                          n_scn=len(scn_leaves), scn_def=scn_def,
+                          bool_mask=bool_mask),
         grid=(G,),
-        in_specs=[pl.BlockSpec((p,), lambda i: (0,)),
-                  pl.BlockSpec((p, p), lambda i: (0, 0))] + [scalar_spec] * 7,
+        in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=out_shapes,
+        out_shape=out_shape,
         interpret=interpret,
-    )(cid, hops, scn.W, scn.seed, scn.lam_local, scn.lam_remote,
-      scn.theta_static, scn.theta_comm, scn.remote_prob)
+    )(*consts, *scn_leaves)
 
-    (makespan, n_events, n_requests, n_success, n_fail, total_idle,
-     startup_end, executed, overflow) = outs
-    return dv.SimResult(
-        makespan=makespan, n_events=n_events, n_requests=n_requests,
-        n_success=n_success, n_fail=n_fail, total_idle=total_idle,
-        startup_end=startup_end, executed=executed,
-        overflow=overflow.astype(jnp.bool_),
-        trace=jnp.zeros((G, 1, 4), jnp.int32),
-        n_trace=jnp.zeros((G,), jnp.int32),
-    )
+    outs = [o.astype(jnp.bool_) if b else o for o, b in zip(outs, bool_mask)]
+    return jax.tree.unflatten(res_def, outs)

@@ -17,7 +17,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import divisible as dv
+from repro.core import engine as eng
 from repro.core import topology as topo_mod
+from repro.core.sweep import make_model
 from repro.core.topology import Topology, tpu_fleet
 
 
@@ -57,15 +59,15 @@ def plan(
         rps = remote_probs if strat == topo_mod.LOCAL_FIRST else (0.25,)
         for rp in rps:
             t = topo.with_strategy(strat, remote_prob=rp)
-            cfg = dv.EngineConfig(
-                topology=t, mwt=mwt,
+            model = make_model(
+                "divisible", topology=t, mwt=mwt,
                 max_events=dv.default_max_events(W, topo.p,
                                                  max(topo.lam_remote, 1)))
-            scn = dv.batch_scenarios(
+            scn = eng.batch_scenarios(
                 W, np.arange(reps, dtype=np.uint32) + seed0,
                 lam_local=topo.lam_local, lam_remote=topo.lam_remote,
                 theta_static=ts, theta_comm=tc, remote_prob=rp)
-            res = dv.simulate_batch(cfg, scn)
+            res = eng.simulate_batch(model, scn)
             ok = ~np.asarray(res.overflow)
             med = float(np.median(np.asarray(res.makespan)[ok])) if ok.any() else np.inf
             rows.append((topo_mod.strategy_name(strat), mwt, ts, tc, rp, med))

@@ -1,0 +1,207 @@
+"""Unified-engine batching paths: DAG + adaptive sweeps through
+``core.sweep`` and the model-generic Pallas kernel (interpret mode), each
+asserted bit-identical against the serial numpy oracles on small grids."""
+import numpy as np
+import pytest
+
+from repro.core import adaptive as ad
+from repro.core import dag as dg
+from repro.core import dag_gen as gen
+from repro.core import divisible as dv
+from repro.core import engine as eng
+from repro.core import topology as T
+from repro.core.oracle import simulate_adaptive_oracle, simulate_dag_oracle
+from repro.core.sweep import as_model, make_model, run_grid
+from repro.kernels.ws_sim import ws_sim_pallas
+
+
+# ---------------------------------------------------------------------------
+# Sweep layer (cross-product grids + vmap) for every task model.
+# ---------------------------------------------------------------------------
+
+def test_run_grid_dag_matches_oracle_per_cell():
+    dagf = gen.merge_sort(400, 32)
+    topo = T.one_cluster(4, 1)
+    g = run_grid(topo, lam_list=[2, 7], reps=2, task_model="dag", dag=dagf)
+    assert len(g) == 4
+    assert not g.overflow.any()
+    assert (g.extras["n_completed"] == dagf.n).all()
+    for k in range(len(g)):
+        o = simulate_dag_oracle(topo, dagf, int(g.seed[k]),
+                                lam_local=int(g.lam[k]),
+                                lam_remote=int(g.lam[k]))
+        assert int(g.makespan[k]) == o["makespan"], k
+        assert int(g.n_requests[k]) == o["n_requests"], k
+        assert np.array_equal(g.extras["executed"][k],
+                              o["executed"].astype(np.int32)), k
+
+
+def test_run_grid_adaptive_matches_oracle_per_cell():
+    topo = T.one_cluster(5, 1)
+    g = run_grid(topo, W_list=[600, 2500], lam_list=[3], reps=2,
+                 task_model="adaptive", merge_alpha=2, merge_beta_num=1)
+    assert len(g) == 4
+    assert not g.overflow.any()
+    for k in range(len(g)):
+        o = simulate_adaptive_oracle(topo, int(g.W[k]), int(g.seed[k]),
+                                     lam_local=int(g.lam[k]),
+                                     lam_remote=int(g.lam[k]),
+                                     merge_alpha=2, merge_beta_num=1)
+        assert int(g.makespan[k]) == o["makespan"], k
+        assert int(g.extras["n_splits"][k]) == o["n_splits"], k
+        assert int(g.extras["total_merge_work"][k]) == o["total_merge_work"], k
+        assert np.array_equal(g.extras["executed"][k],
+                              o["executed"].astype(np.int32)), k
+
+
+def test_run_grid_divisible_unchanged_shape():
+    topo = T.one_cluster(8, 1)
+    g = run_grid(topo, W_list=[1000, 5000], lam_list=[2, 10], reps=4)
+    assert len(g) == 2 * 2 * 4
+    assert not g.overflow.any()
+    assert "n_events" in g.extras and "executed" in g.extras
+
+
+def test_make_model_roundtrip_and_as_model():
+    topo = T.one_cluster(4, 2)
+    m = make_model("divisible", topology=topo)
+    assert as_model(m) is m
+    assert isinstance(as_model(eng.EngineConfig(topology=topo)),
+                      dv.DivisibleModel)
+    dagf = gen.fork_join(4)
+    assert isinstance(
+        as_model(dg.DagEngineConfig(topology=topo, dag=dagf)), dg.DagModel)
+    assert isinstance(
+        as_model(ad.AdaptiveEngineConfig(topology=topo)), ad.AdaptiveModel)
+    with pytest.raises(ValueError):
+        make_model("dag", topology=topo)  # dag= missing
+    with pytest.raises(ValueError):
+        make_model("nope", topology=topo)
+
+
+def test_run_grid_rejects_mismatched_prebuilt_model():
+    topo8, topo4 = T.one_cluster(8, 1), T.one_cluster(4, 1)
+    model = make_model("divisible", topology=topo4, max_events=1 << 16)
+    with pytest.raises(ValueError):
+        run_grid(topo8, W_list=[100], lam_list=[1], reps=1, task_model=model)
+    with pytest.raises(ValueError):          # config kwargs would be ignored
+        run_grid(topo4, W_list=[100], lam_list=[1], reps=1,
+                 task_model=model, mwt=True)
+    with pytest.raises(ValueError):
+        make_model(model, topology=topo8)
+    g = run_grid(topo4, W_list=[100], lam_list=[1], reps=1, task_model=model)
+    assert g.p == 4 and len(g) == 1
+
+
+def test_dag_adaptive_trace_logging():
+    """log_trace now produces an observable trace for every model."""
+    topo = T.one_cluster(4, 3)
+    dagf = gen.fork_join(4)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, max_events=1 << 16,
+                             log_trace=True, max_trace=512)
+    r = dg.simulate_dag(cfg, eng.make_scenario(0, 5, lam=3))
+    assert int(r.n_trace) > 0
+    kinds = np.asarray(r.trace)[:int(r.n_trace), 2]
+    assert (kinds >= 0).all() and (kinds <= 4).all()
+    acfg = ad.AdaptiveEngineConfig(topology=topo, max_events=1 << 16,
+                                   log_trace=True, max_trace=512)
+    ra = ad.simulate_adaptive(acfg, eng.make_scenario(800, 5, lam=3))
+    assert int(ra.n_trace) > 0
+
+
+def test_batch_equals_singles_all_models():
+    """vmap path == single path for every model (same compiled core)."""
+    topo = T.one_cluster(4, 4)
+    dagf = gen.binary_tree(6)
+    models = [
+        make_model("divisible", topology=topo, max_events=1 << 18),
+        make_model("dag", topology=topo, dag=dagf, max_events=1 << 18),
+        make_model("adaptive", topology=topo, max_events=1 << 18),
+    ]
+    scn = eng.batch_scenarios(1500, np.arange(3, dtype=np.uint32) + 2, lam=4)
+    for model in models:
+        batch = eng.simulate_batch(model, scn)
+        for k in range(3):
+            one = eng.simulate(model,
+                               jax_tree_index(scn, k))
+            assert int(batch.makespan[k]) == int(one.makespan)
+            assert int(batch.n_events[k]) == int(one.n_events)
+
+
+def jax_tree_index(scn, k):
+    import jax
+    return jax.tree.map(lambda x: x[k], scn)
+
+
+# ---------------------------------------------------------------------------
+# Model-generic Pallas kernel (interpret mode).
+# ---------------------------------------------------------------------------
+
+def test_pallas_dag_matches_oracle():
+    dagf = gen.merge_sort(500, 32)
+    topo = T.one_cluster(4, 3)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, max_events=1 << 18)
+    seeds = np.arange(4, dtype=np.uint32) + 1
+    scn = eng.batch_scenarios(0, seeds, lam=3)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    assert not np.asarray(got.overflow).any()
+    for k, seed in enumerate(seeds):
+        o = simulate_dag_oracle(topo, dagf, int(seed))
+        assert int(got.makespan[k]) == o["makespan"]
+        assert int(got.n_requests[k]) == o["n_requests"]
+        assert int(got.n_success[k]) == o["n_success"]
+        assert int(got.total_idle[k]) == o["total_idle"]
+        assert np.array_equal(np.asarray(got.executed)[k],
+                              o["executed"].astype(np.int32))
+        assert np.array_equal(np.asarray(got.tasks_run)[k],
+                              o["tasks_run"].astype(np.int32))
+
+
+def test_pallas_adaptive_matches_oracle():
+    topo = T.one_cluster(6, 5)
+    cfg = ad.AdaptiveEngineConfig(topology=topo, merge_alpha=2,
+                                  merge_beta_num=1, pool_cap=4096,
+                                  max_events=1 << 18)
+    seeds = np.arange(4, dtype=np.uint32) + 7
+    scn = eng.batch_scenarios(3000, seeds, lam=5)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    assert not np.asarray(got.overflow).any()
+    for k, seed in enumerate(seeds):
+        o = simulate_adaptive_oracle(topo, 3000, int(seed), merge_alpha=2,
+                                     merge_beta_num=1)
+        assert int(got.makespan[k]) == o["makespan"]
+        assert int(got.n_splits[k]) == o["n_splits"]
+        assert int(got.n_created[k]) == o["n_created"]
+        assert int(got.total_merge_work[k]) == o["total_merge_work"]
+        assert np.array_equal(np.asarray(got.executed)[k],
+                              o["executed"].astype(np.int32))
+
+
+@pytest.mark.parametrize("mwt,lifo", [(False, True), (True, False)])
+def test_pallas_dag_bit_identical_to_engine(mwt, lifo):
+    dagf = gen.random_layered(8, 12, 0.3, seed=3)
+    topo = T.two_clusters(3, 20).with_strategy(T.LOCAL_FIRST, remote_prob=0.2)
+    cfg = dg.DagEngineConfig(topology=topo, dag=dagf, mwt=mwt,
+                             owner_lifo=lifo, max_events=1 << 18)
+    scn = eng.batch_scenarios(0, np.arange(3, dtype=np.uint32) + 4,
+                              lam_local=1, lam_remote=20, remote_prob=0.2)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    expect = dg.simulate_dag_batch(cfg, scn)
+    for field in got._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)),
+            np.asarray(getattr(expect, field)), err_msg=field)
+
+
+def test_pallas_adaptive_bit_identical_to_engine():
+    topo = T.two_clusters(3, 15)
+    cfg = ad.AdaptiveEngineConfig(topology=topo, mwt=True, pool_cap=2048,
+                                  max_events=1 << 18)
+    scn = eng.batch_scenarios(2000, np.arange(3, dtype=np.uint32) + 1,
+                              lam_local=1, lam_remote=15)
+    got = ws_sim_pallas(cfg, scn, interpret=True)
+    expect = ad.simulate_adaptive_batch(cfg, scn)
+    for field in got._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)),
+            np.asarray(getattr(expect, field)), err_msg=field)
