@@ -10,6 +10,9 @@ artifacts/bench/). Figures:
   model_throughput       scenarios/sec + events/sec for ALL task models
                          (divisible, dag, adaptive) through the unified core
   sched_planner          planner decision quality on a 2-pod fleet
+  service_throughput     sweep service: cold vs warm queries/sec, broker
+                         coalescing batch sizes, adaptive-vs-fixed-reps
+                         replication savings at equal CI width
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -255,6 +258,81 @@ def sched_planner(reps: int):
          f";{dec.theta_comm})/mwt={dec.mwt}; x{gain:.2f} vs uniform")
 
 
+def service_throughput(reps: int):
+    """The caching/coalescing/adaptive wins of the sweep service
+    (DESIGN.md §5), measured:
+
+    * cold vs warm: the same batch of queries against an empty store and
+      again against the populated one (warm answers touch no simulator);
+    * coalescing: concurrent queries per dispatched device program;
+    * adaptive savings: replications the adaptive estimator spent to reach
+      a CI target vs what a fixed-reps sweep needs for the same width
+      (n_fixed = ceil((z·sigma/h)²) per cell, from the measured variance).
+    """
+    import tempfile
+    from repro.core import one_cluster
+    from repro.service import SimulationService
+    from repro.service.estimator import fixed_reps_for_width
+
+    p, W = 32, 200_000
+    lams = (2, 10, 30, 50)
+    rows = []
+
+    svc = SimulationService(root=tempfile.mkdtemp(prefix="bench_store_"))
+    # Concurrent queries over different θ thresholds share one task-model
+    # bucket (θ is a traced scenario field), so the broker coalesces them
+    # into a single device program — the planner's access pattern.
+    thetas = ((0, 0), (0, 2), (8, 0), (16, 2))
+    make = lambda: [svc.make_query(one_cluster(p, 1), W_list=[W],
+                                   lam_list=list(lams), theta=(th,),
+                                   reps=reps, seed0=11)
+                    for th in thetas]
+    t0 = time.time()
+    svc.query_many(make())                      # compile + simulate
+    cold_s = time.time() - t0
+    d_cold = svc.n_dispatches
+    t0 = time.time()
+    warm_res = svc.query_many(make())
+    warm_s = time.time() - t0
+    d_warm = svc.n_dispatches - d_cold
+    assert all(r.from_cache for r in warm_res) and d_warm == 0
+    sizes = [d["n_queries"] for d in svc.broker.dispatch_log]
+    coalesce = sum(sizes) / max(len(sizes), 1)
+
+    # adaptive vs fixed at the width the adaptive run achieved
+    tgt_rel = 0.01
+    t0 = time.time()
+    ares = svc.query(one_cluster(p, 1), W_list=[W], lam_list=list(lams),
+                     ci=tgt_rel, ci_relative=True, batch_reps=8,
+                     max_reps=64 * max(reps, 16), seed0=23)
+    adapt_s = time.time() - t0
+    cells = ares.cells
+    n_adapt = int(cells.n.sum())
+    n_fixed_per_cell = max(
+        fixed_reps_for_width(float(cells.std[c]),
+                             tgt_rel * float(cells.mean[c]))
+        for c in range(len(cells)))
+    n_fixed = n_fixed_per_cell * len(cells)     # fixed reps are uniform
+    rows.append(dict(
+        n_queries=len(thetas), cold_s=round(cold_s, 4),
+        warm_s=round(warm_s, 4),
+        cold_qps=round(len(thetas) / cold_s, 2),
+        warm_qps=round(len(thetas) / warm_s, 2),
+        speedup=round(cold_s / max(warm_s, 1e-9), 1),
+        dispatches_cold=d_cold, dispatches_warm=d_warm,
+        mean_queries_per_dispatch=round(coalesce, 2),
+        adaptive_reps=n_adapt, fixed_reps_equiv=n_fixed,
+        rep_savings=round(n_fixed / max(n_adapt, 1), 2),
+        adaptive_s=round(adapt_s, 4), ci_rel_target=tgt_rel))
+    _write_csv("service_throughput", rows)
+    r = rows[0]
+    _row("service_throughput", warm_s * 1e6 / len(thetas),
+         f"warm x{r['speedup']} vs cold ({r['warm_qps']:,.0f} vs "
+         f"{r['cold_qps']:.1f} q/s); {r['mean_queries_per_dispatch']} "
+         f"queries/dispatch; adaptive {n_adapt} reps vs fixed {n_fixed} "
+         f"for ±{tgt_rel:.0%} CI (x{r['rep_savings']} fewer)")
+
+
 def roofline(_reps: int):
     """Aggregate the dry-run artifacts into the §Roofline table."""
     cells = sorted((ART / "dryrun").glob("*.json"))
@@ -314,6 +392,7 @@ def main():
         "sim_throughput": lambda: sim_throughput(max(reps, 32)),
         "model_throughput": lambda: model_throughput(max(reps, 32)),
         "sched_planner": lambda: sched_planner(reps),
+        "service_throughput": lambda: service_throughput(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

@@ -4,6 +4,11 @@ Fig 10: overhead ratio 4-5.5x; fitted constant ~3.8.
 Fig 11: acceptable-latency law  W/p ~= 470*lambda.
 Fig 12/14: MWT vs SWT: startup-phase speedup, flat overall gain.
 
+Fig 10 runs through the sweep *service* (DESIGN.md §5): each table cell is
+adaptively replicated until E[Cmax] has a 1% confidence interval, instead of
+a fixed rep count, and the printed table carries the CI columns. Rerunning
+this script answers every cell from the content-addressed store.
+
 Full-scale parameters (1000 reps, W to 1e8) run the same code; see
 benchmarks/ for the CSV versions used in EXPERIMENTS.md.
 
@@ -13,31 +18,38 @@ import numpy as np
 
 from repro.core import analysis, engine as eng, make_model, one_cluster
 from repro.core import divisible as dv
+from repro.service import SimulationService
 
 
-def overhead_and_fit(reps=24):
-    print("=== Fig 10: overhead ratio + fitted constant ===")
-    ratios_all, fits_all = [], []
+def overhead_and_fit(service=None, rel_hw=0.01):
+    print("=== Fig 10: overhead ratio + fitted constant "
+          f"(adaptive, ±{rel_hw:.0%} CI on E[Cmax]) ===")
+    svc = service or SimulationService()
+    ratios_all, fits_all, total_reps = [], [], 0
     for p in (32, 64):
         topo = one_cluster(p, 1)
-        for W in (10**5, 10**6, 10**7):
-            for lam in (2, 62, 262):
-                model = make_model(
-                    "divisible", topology=topo,
-                    max_events=dv.default_max_events(W, p, lam))
-                scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 1,
-                                          lam=lam)
-                res = eng.simulate_batch(model, scn)
-                ms = np.asarray(res.makespan)
-                r = analysis.overhead_ratio(ms, W, p, lam)
-                c = analysis.fitted_constant(ms, W, p, lam)
-                ratios_all.append(np.median(r))
-                fits_all.append(np.median(c))
-                print(f"  p={p:3d} W=1e{int(np.log10(W))} lam={lam:3d}: "
-                      f"ratio={np.median(r):5.2f} fit_c={np.median(c):5.2f}")
+        res = svc.query(topo, W_list=[10**5, 10**6, 10**7],
+                        lam_list=[2, 62, 262], ci=rel_hw, ci_relative=True,
+                        batch_reps=8, max_reps=96, seed0=1)
+        cells = res.cells
+        total_reps += int(cells.n.sum())
+        for c in range(len(cells)):
+            W, lam = int(cells.W[c]), int(cells.lam_remote[c])
+            mean, hw, n = cells.mean[c], cells.half_width[c], int(cells.n[c])
+            # ratio/fit are affine in Cmax, so the CI transfers directly.
+            r = analysis.overhead_ratio(mean, W, p, lam)
+            r_hw = r - analysis.overhead_ratio(mean + hw, W, p, lam)
+            fit = analysis.fitted_constant(mean, W, p, lam)
+            fit_hw = analysis.fitted_constant(mean + hw, W, p, lam) - fit
+            ratios_all.append(float(r))
+            fits_all.append(float(fit))
+            print(f"  p={p:3d} W=1e{int(np.log10(W))} lam={lam:3d}: "
+                  f"Cmax={mean:12.1f} ±{hw:8.1f} (n={n:3d})  "
+                  f"ratio={r:5.2f}±{abs(r_hw):4.2f} "
+                  f"fit_c={fit:5.2f}±{fit_hw:4.2f}")
     print(f"  => median overhead ratio {np.median(ratios_all):.2f} "
           f"(paper: 4-5.5); fitted constant {np.median(fits_all):.2f} "
-          f"(paper: 3.8)")
+          f"(paper: 3.8); {total_reps} adaptive replications")
 
 
 def acceptable_latency(reps=16):
@@ -106,7 +118,9 @@ def all_task_models(reps=8):
 
 
 if __name__ == "__main__":
-    overhead_and_fit()
+    svc = SimulationService()
+    overhead_and_fit(svc)
     acceptable_latency()
     mwt_vs_swt()
     all_task_models()
+    print(f"\nservice: {svc.stats()}")

@@ -56,6 +56,13 @@ from repro.core.topology import Topology
 
 INF32 = np.int32(2**31 - 1)
 
+#: Version of the event-loop semantics. Bumped whenever a change alters any
+#: result a simulation can produce (event ordering, PRNG, accounting); part
+#: of the content-addressed key of the service result store
+#: (``repro.service.store``), so stale cached sweeps can never be replayed
+#: against a newer engine.
+ENGINE_VERSION = 2
+
 # Processor states (values are the lax.switch branch index).
 ACTIVE = 0
 REQ_FLIGHT = 1

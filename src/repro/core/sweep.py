@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Optional, Sequence, Union
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ from repro.core import divisible
 from repro.core import dag as dg
 from repro.core import engine as eng
 from repro.core.divisible import EngineConfig, Scenario, SimResult
-from repro.core.topology import Topology, one_cluster
+from repro.core.topology import Topology, one_cluster, remote_prob_u32
 
 #: Scenario-level columns shared by every task model's result type.
 _CORE_FIELDS = ("makespan", "n_requests", "n_success", "n_fail",
@@ -109,6 +109,108 @@ class GridResult:
         return int(self.makespan.shape[0])
 
 
+class GridRows(NamedTuple):
+    """Flat canonical row set of a (W × λ × θ × rep) cross product.
+
+    The single source of truth for cell ordering and per-row seeds — batch
+    building, chunked execution and the service store's content addressing
+    (``repro.service.store``) all derive from it, so the same grid spec
+    always produces bit-identical scenarios. Entries of ``lam_list`` may be
+    single ints (both latencies equal, the paper's one-cluster sweeps) or
+    ``(lam_local, lam_remote)`` pairs (multi-cluster fleets).
+    """
+    W: np.ndarray             # int32[n]
+    lam_local: np.ndarray     # int32[n]
+    lam_remote: np.ndarray    # int32[n]
+    theta_static: np.ndarray  # int32[n]
+    theta_comm: np.ndarray    # int32[n]
+    seed: np.ndarray          # uint32[n]
+
+    def __len__(self):
+        return int(self.W.shape[0])
+
+    def slice(self, lo: int, hi: int) -> "GridRows":
+        return GridRows(*(a[lo:hi] for a in self))
+
+
+def lam_pair(l) -> tuple:
+    """Normalize a lam entry to an int (lam_local, lam_remote) pair."""
+    if isinstance(l, (tuple, list, np.ndarray)):
+        ll, lr = l
+        return int(ll), int(lr)
+    return int(l), int(l)
+
+
+def row_seeds(n: int, seed0: int = 1, stream: int = 0) -> np.ndarray:
+    """Deterministic per-row seeds. ``stream`` opens a fresh seed batch for
+    the same grid — the adaptive estimator uses successive streams for
+    successive Monte-Carlo replication rounds. The combined (stream, idx)
+    index is multiplied by an odd constant (a bijection mod 2^32), so seeds
+    are guaranteed collision-free for idx < 2^22 and stream < 2^10; stream 0
+    reproduces the historical ``build_batch`` seeds bit-for-bit."""
+    if n >= 1 << 22 or stream >= 1 << 10:
+        raise ValueError(f"seed space exhausted: n={n}, stream={stream}")
+    combined = np.arange(n, dtype=np.uint32) + np.uint32(int(stream) << 22)
+    return combined * np.uint32(2654435761) + np.uint32(seed0)
+
+
+def grid_rows(
+    W_list: Sequence[int],
+    lam_list: Sequence[int],
+    reps: int,
+    theta: Sequence[tuple] = ((0, 0),),
+    seed0: int = 1,
+    stream: int = 0,
+) -> GridRows:
+    """Canonical cross-product rows (W outer … rep inner) with seeds."""
+    lams = [lam_pair(l) for l in lam_list]
+    rows = list(itertools.product(W_list, lams, theta, range(reps)))
+    return GridRows(
+        W=np.array([r[0] for r in rows], np.int32),
+        lam_local=np.array([r[1][0] for r in rows], np.int32),
+        lam_remote=np.array([r[1][1] for r in rows], np.int32),
+        theta_static=np.array([r[2][0] for r in rows], np.int32),
+        theta_comm=np.array([r[2][1] for r in rows], np.int32),
+        seed=row_seeds(len(rows), seed0, stream),
+    )
+
+
+def canonical_grid(
+    W_list: Sequence[int],
+    lam_list: Sequence[int],
+    reps: int,
+    theta: Sequence[tuple] = ((0, 0),),
+    seed0: int = 1,
+    remote_prob: float = 0.25,
+) -> dict:
+    """JSON-able canonical form of a grid spec (plain ints only; the float
+    ``remote_prob`` is canonicalized through its u32 fixed-point encoding,
+    which is also what the engine consumes). Two grid specs with equal
+    canonical forms produce bit-identical scenario batches."""
+    return {
+        "W_list": [int(w) for w in W_list],
+        "lam_list": [list(lam_pair(l)) for l in lam_list],
+        "theta": [[int(a), int(b)] for a, b in theta],
+        "reps": int(reps),
+        "seed0": int(seed0),
+        "remote_prob_u32": remote_prob_u32(float(remote_prob)),
+    }
+
+
+def scenario_from_rows(rows: GridRows, remote_prob: float = 0.25) -> Scenario:
+    """Batched Scenario from canonical rows (λ sets both latency scalars)."""
+    return Scenario(
+        W=jnp.asarray(rows.W),
+        seed=jnp.asarray(rows.seed),
+        lam_local=jnp.asarray(rows.lam_local),
+        lam_remote=jnp.asarray(rows.lam_remote),
+        theta_static=jnp.asarray(rows.theta_static),
+        theta_comm=jnp.asarray(rows.theta_comm),
+        remote_prob=jnp.full((len(rows),),
+                             np.uint32(remote_prob_u32(float(remote_prob)))),
+    )
+
+
 def build_batch(
     W_list: Sequence[int],
     lam_list: Sequence[int],
@@ -118,23 +220,108 @@ def build_batch(
     remote_prob: float = 0.25,
 ) -> Scenario:
     """Cross-product Scenario batch. Seeds are distinct per cell."""
-    rows = list(itertools.product(W_list, lam_list, theta, range(reps)))
-    W = np.array([r[0] for r in rows], np.int32)
-    lam = np.array([r[1] for r in rows], np.int32)
-    ts = np.array([r[2][0] for r in rows], np.int32)
-    tc = np.array([r[2][1] for r in rows], np.int32)
-    seeds = (np.arange(len(rows), dtype=np.uint32) * np.uint32(2654435761)
-             + np.uint32(seed0))
-    return Scenario(
-        W=jnp.asarray(W),
-        seed=jnp.asarray(seeds),
-        lam_local=jnp.asarray(lam),
-        lam_remote=jnp.asarray(lam),
-        theta_static=jnp.asarray(ts),
-        theta_comm=jnp.asarray(tc),
-        remote_prob=jnp.full((len(rows),),
-                             np.uint32(min(int(remote_prob * 2**32), 2**32 - 1))),
+    return scenario_from_rows(grid_rows(W_list, lam_list, reps, theta, seed0),
+                              remote_prob=remote_prob)
+
+
+def grid_from_result(p: int, rows: GridRows, res) -> GridResult:
+    """Assemble a :class:`GridResult` from canonical rows and the (already
+    host-transferred) result tree of a batched simulation over them."""
+    res = jax.tree.map(np.asarray, res)
+    extras = {k: v for k, v in res._asdict().items()
+              if k in res._fields and k not in _CORE_FIELDS
+              and k not in ("trace", "n_trace")}
+    # lam (the sweep variable) is lam_remote; the intra-cluster latency rides
+    # in extras so asymmetric (ICI/DCN) grids stay fully described.
+    extras["lam_local"] = np.asarray(rows.lam_local)
+    return GridResult(
+        p=p,
+        W=np.asarray(rows.W),
+        lam=np.asarray(rows.lam_remote),
+        theta_static=np.asarray(rows.theta_static),
+        theta_comm=np.asarray(rows.theta_comm),
+        seed=np.asarray(rows.seed),
+        makespan=res.makespan,
+        n_requests=res.n_requests,
+        n_success=res.n_success,
+        n_fail=res.n_fail,
+        total_idle=res.total_idle,
+        startup_end=res.startup_end,
+        overflow=res.overflow,
+        extras=extras,
     )
+
+
+def concat_grids(parts: Sequence[GridResult]) -> GridResult:
+    """Concatenate chunked :class:`GridResult` pieces along the cell axis."""
+    if not parts:
+        raise ValueError("concat_grids needs at least one part")
+    if len({g.p for g in parts}) != 1:
+        raise ValueError("cannot concatenate grids of different p")
+    if len(parts) == 1:
+        return parts[0]
+    fields = {
+        f.name: np.concatenate([getattr(g, f.name) for g in parts])
+        for f in dataclasses.fields(GridResult)
+        if f.name not in ("p", "extras")
+    }
+    extras = {k: np.concatenate([g.extras[k] for g in parts])
+              for k in parts[0].extras}
+    return GridResult(p=parts[0].p, extras=extras, **fields)
+
+
+def resolve_model(
+    topo: Topology,
+    task_model: Union[str, eng.TaskModel] = "divisible",
+    W_list: Sequence[int] = (0,),
+    lam_list: Sequence[int] = (1,),
+    mwt: bool = False,
+    max_events: Optional[int] = None,
+    pow2_max_events: bool = False,
+    **model_kw,
+) -> eng.TaskModel:
+    """Grid-aware model construction shared by :func:`run_grid` and the
+    service layer: defaults ``max_events`` from the worst (W, λ) cell.
+
+    ``pow2_max_events`` rounds the *defaulted* cap up to a power of two.
+    The cap only bounds the event loop (a finished simulation exits early,
+    so a larger cap costs nothing), but it is static model config — rounding
+    it buckets near-identical queries onto one compiled model, which is what
+    lets the service broker coalesce them into one dispatch.
+    """
+    if not isinstance(task_model, str):
+        model = as_model(task_model)
+        if mwt or max_events is not None or model_kw:
+            raise ValueError(
+                "prebuilt task_model carries its own config; mwt/max_events/"
+                f"model kwargs {sorted(model_kw)} would be ignored")
+        if model.topology != topo:
+            raise ValueError("prebuilt task_model topology differs from topo")
+        return model
+    if max_events is None:
+        dagf = model_kw.get("dag")
+        W_eff = [dagf.total_work] if (task_model == "dag" and dagf is not None) \
+            else [int(w) for w in W_list]
+        lam_eff = {l for entry in lam_list for l in lam_pair(entry)}
+        max_events = max(
+            divisible.default_max_events(int(w), topo.p, int(l))
+            for w in W_eff for l in lam_eff)
+        if pow2_max_events:
+            max_events = 1 << max(int(max_events) - 1, 1).bit_length()
+    return make_model(task_model, topology=topo, mwt=mwt,
+                      max_events=max_events, **model_kw)
+
+
+def run_rows(model: eng.TaskModel, rows: GridRows, remote_prob: float = 0.25,
+             mesh: Optional[Mesh] = None,
+             shard_axes: Sequence[str] = ("data",)) -> GridResult:
+    """Run one batched simulation over canonical rows -> GridResult."""
+    scn = scenario_from_rows(rows, remote_prob=remote_prob)
+    if mesh is not None:
+        res = simulate_sharded(model, scn, mesh, shard_axes)
+    else:
+        res = eng.simulate_batch(model, scn)
+    return grid_from_result(model.p, rows, res)
 
 
 def run_grid(
@@ -149,6 +336,9 @@ def run_grid(
     shard_axes: Sequence[str] = ("data",),
     seed0: int = 1,
     task_model: Union[str, eng.TaskModel] = "divisible",
+    chunk_size: Optional[int] = None,
+    on_chunk: Optional[Callable[[int, GridResult], None]] = None,
+    start_chunk: int = 0,
     **model_kw,
 ) -> GridResult:
     """Simulate the full (W × λ × θ × reps) grid on topology ``topo``.
@@ -160,52 +350,33 @@ def run_grid(
     and the grid sweeps latency/threshold/rep only. A prebuilt model carries
     its own static config, so ``mwt``/``max_events``/``model_kw`` must be
     left at their defaults and its topology must equal ``topo``.
+
+    ``chunk_size`` splits the batch into fixed-size pieces executed one
+    device-program at a time (bounds peak memory for huge grids) and makes
+    the sweep *resumable*: chunk boundaries are deterministic functions of
+    the grid spec, each finished chunk is handed to ``on_chunk(idx, grid)``
+    for persistence, and a rerun with ``start_chunk=k`` recomputes only
+    chunks ``>= k`` (stitch with :func:`concat_grids`).
     """
-    if not isinstance(task_model, str):
-        model = as_model(task_model)
-        if mwt or max_events is not None or model_kw:
-            raise ValueError(
-                "prebuilt task_model carries its own config; mwt/max_events/"
-                f"model kwargs {sorted(model_kw)} would be ignored")
-        if model.topology != topo:
-            raise ValueError("prebuilt task_model topology differs from topo")
-    else:
-        if max_events is None:
-            dagf = model_kw.get("dag")
-            W_eff = [dagf.total_work] if (task_model == "dag" and dagf is not None) \
-                else [int(w) for w in W_list]
-            max_events = max(
-                divisible.default_max_events(int(w), topo.p, int(l))
-                for w in W_eff for l in lam_list)
-        model = make_model(task_model, topology=topo, mwt=mwt,
-                           max_events=max_events, **model_kw)
-    scn = build_batch(W_list, lam_list, reps, theta, seed0=seed0)
+    model = resolve_model(topo, task_model, W_list=W_list, lam_list=lam_list,
+                          mwt=mwt, max_events=max_events, **model_kw)
+    rows = grid_rows(W_list, lam_list, reps, theta, seed0=seed0)
 
-    if mesh is not None:
-        res = simulate_sharded(model, scn, mesh, shard_axes)
+    if chunk_size is None:
+        chunks = [(0, rows)]
     else:
-        res = eng.simulate_batch(model, scn)
+        chunk_size = max(int(chunk_size), 1)
+        chunks = [(ci, rows.slice(lo, lo + chunk_size))
+                  for ci, lo in enumerate(range(0, len(rows), chunk_size))
+                  if ci >= start_chunk]
 
-    res = jax.tree.map(np.asarray, res)
-    extras = {k: v for k, v in res._asdict().items()
-              if k in res._fields and k not in _CORE_FIELDS
-              and k not in ("trace", "n_trace")}
-    return GridResult(
-        p=model.p,
-        W=np.asarray(scn.W),
-        lam=np.asarray(scn.lam_local),
-        theta_static=np.asarray(scn.theta_static),
-        theta_comm=np.asarray(scn.theta_comm),
-        seed=np.asarray(scn.seed),
-        makespan=res.makespan,
-        n_requests=res.n_requests,
-        n_success=res.n_success,
-        n_fail=res.n_fail,
-        total_idle=res.total_idle,
-        startup_end=res.startup_end,
-        overflow=res.overflow,
-        extras=extras,
-    )
+    parts = []
+    for ci, rws in chunks:
+        g = run_rows(model, rws, mesh=mesh, shard_axes=shard_axes)
+        if on_chunk is not None:
+            on_chunk(ci, g)
+        parts.append(g)
+    return concat_grids(parts)
 
 
 def simulate_sharded(model, scn: Scenario, mesh: Mesh,

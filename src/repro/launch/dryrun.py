@@ -53,10 +53,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     mesh = make_production_mesh(multi_pod=multi_pod)
     plan = plan_cell(arch, shape_name, mesh, multi_pod=multi_pod,
                      cfg_overrides=overrides)
-    # jax.set_mesh: the context-parallel decode path uses jax.shard_map with
-    # the ambient mesh; `with mesh:` alone doesn't install the sharding
-    # context that shard_map resolves against.
-    with jax.set_mesh(mesh):
+    # use_mesh: the context-parallel decode path resolves shard_map against
+    # the ambient mesh; use_mesh installs whichever sharding context the
+    # installed JAX version consumes (jax.sharding.use_mesh / jax.set_mesh /
+    # the 0.4.x resource env).
+    from repro.launch.mesh import use_mesh
+    with use_mesh(mesh):
         lowered = lower_cell(plan)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -127,7 +127,17 @@ class CollectiveStats:
 
 _DEF_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
-_DOT_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)")
+# Operand references in optimized HLO are printed either bare (``%name``) or
+# typed (``f32[32,32]{1,0} %name``) depending on the dump flavor / XLA
+# version. _OPND_TY optionally consumes the inline type so the operand *name*
+# capture works for both. Invariant (pinned by
+# tests/test_launch.py::test_hlo_cost_counts_while_trips): dot FLOPs must be
+# derived from the lhs operand's contracting extent looked up in the symbol
+# table — if operand names stop resolving, while-body dot FLOPs silently
+# drop to zero.
+_OPND_TY = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s+)?"
+_DOT_RE = re.compile(r"\bdot\(\s*" + _OPND_TY + r"%?([\w\.\-]+)"
+                     r"\s*,\s*" + _OPND_TY + r"%?([\w\.\-]+)")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
@@ -158,7 +168,8 @@ _ALIAS_OPS = re.compile(
     r"\b(get-tuple-element|tuple|parameter|constant|bitcast)\(")
 
 
-_DUS_RE = re.compile(r"dynamic-update-slice\(\s*%?[\w\.\-]+\s*,\s*%?([\w\.\-]+)")
+_DUS_RE = re.compile(r"dynamic-update-slice\(\s*" + _OPND_TY +
+                     r"%?[\w\.\-]+\s*,\s*" + _OPND_TY + r"%?([\w\.\-]+)")
 
 
 def _comp_cost(lines: List[str], table) -> Tuple[float, float]:

@@ -29,6 +29,34 @@ def make_test_mesh(shape: Tuple[int, ...] = (1, 1),
     return Mesh(devs, axes)
 
 
+def use_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` as the ambient mesh, across JAX
+    versions: ``jax.sharding.use_mesh`` (new) > ``jax.set_mesh`` (transitional)
+    > the Mesh object itself (on 0.4.x a Mesh is the context manager that
+    installs the thread-local resource env consumed by jit/pjit)."""
+    for mod, name in ((jax.sharding, "use_mesh"), (jax, "set_mesh")):
+        fn = getattr(mod, name, None)
+        if fn is not None:
+            return fn(mesh)
+    return mesh
+
+
+def shard_map_compat(f, *, in_specs, out_specs):
+    """``jax.shard_map`` across versions. The new API resolves the mesh from
+    the ambient context set by :func:`use_mesh`; on 0.4.x we fetch the
+    resource-env mesh that ``with mesh:`` installed and pass it explicitly
+    (where ``check_vma`` was still called ``check_rep``). Must be called at
+    trace time, inside the :func:`use_mesh` context."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as esm
+    from jax._src.mesh import thread_resources
+    mesh = thread_resources.env.physical_mesh
+    return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Axes that shard the batch (data parallel): ('pod','data') or ('data',)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

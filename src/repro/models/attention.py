@@ -214,7 +214,10 @@ def make_cp_decode_attention(cp_axes: tuple, batch_axes: tuple = ()):
           (batch_axes[0] if batch_axes else None))
 
     def inner(q, kc, vc, k_new, v_new, pos, kv_len, window):
-        sizes = [lax.axis_size(a) for a in cp_axes]
+        # lax.axis_size is missing on older JAX; psum(1, axis) is its
+        # constant-folded equivalent inside shard_map.
+        ax_size = getattr(lax, "axis_size", None) or (lambda a: lax.psum(1, a))
+        sizes = [ax_size(a) for a in cp_axes]
         idx = 0
         for a, s in zip(cp_axes, sizes):
             idx = idx * s + lax.axis_index(a)
@@ -240,13 +243,13 @@ def make_cp_decode_attention(cp_axes: tuple, batch_axes: tuple = ()):
         f = functools.partial(inner, window=window)
         cache_spec = P(bx, ax, None, None)
         tok_spec = P(bx, None, None, None)
-        return jax.shard_map(
+        from repro.launch.mesh import shard_map_compat
+        return shard_map_compat(
             lambda q_, kc_, vc_, kn_, vn_, pos_, kl_: f(q_, kc_, vc_, kn_,
                                                         vn_, pos_, kl_),
             in_specs=(tok_spec, cache_spec, cache_spec, tok_spec, tok_spec,
                       P(), P()),
             out_specs=(tok_spec, cache_spec, cache_spec),
-            check_vma=False,
         )(q, kc, vc, k_new, v_new, pos, kv_len)
 
     return wrapped

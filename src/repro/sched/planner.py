@@ -4,23 +4,37 @@ The paper's stated purpose — "compare different strategies that take
 communication time and cluster's topology into account" — used as a runtime
 component: map the physical fleet (pods, ICI/DCN delays) onto the paper's
 multi-cluster model, sweep victim-selection strategies × steal thresholds ×
-SWT/MWT in the (fast, vmapped) simulator, and hand the best policy to the
-host scheduler. This is how the framework picks its serving/data-plane
-stealing policy instead of hardcoding one.
+SWT/MWT in the simulator, and hand the best policy to the host scheduler.
+
+Policy picks are *service queries* (DESIGN.md §5): every (strategy, MWT,
+remote_prob) combination is one ``SimQuery`` whose grid carries all the θ
+thresholds, so the broker coalesces the θ variants of a combination into
+one batched dispatch (remote_prob is part of the broker's bucket key, so
+rp variants dispatch separately), and a replanned fleet (same topology,
+same workload) is answered entirely from the content-addressed store —
+zero simulator dispatches.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import divisible as dv
-from repro.core import engine as eng
 from repro.core import topology as topo_mod
-from repro.core.sweep import make_model
 from repro.core.topology import Topology, tpu_fleet
+from repro.service.api import SimulationService
+
+#: Module-default service so repeated plans share one store/LRU.
+_DEFAULT_SERVICE: Optional[SimulationService] = None
+
+
+def default_service() -> SimulationService:
+    global _DEFAULT_SERVICE
+    if _DEFAULT_SERVICE is None:
+        _DEFAULT_SERVICE = SimulationService()
+    return _DEFAULT_SERVICE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +47,7 @@ class PlannerDecision:
     expected_makespan: float
     baseline_makespan: float        # uniform/no-threshold reference
     table: Tuple = ()               # full sweep results (for logging)
+    n_dispatches: int = 0           # simulator programs this plan cost
 
     @property
     def strategy_name(self) -> str:
@@ -49,27 +64,37 @@ def plan(
     thetas: Tuple[Tuple[int, int], ...] = ((0, 0), (0, 2), (16, 0)),
     mwt_opts: Tuple[bool, ...] = (False, True),
     seed0: int = 7,
+    service: Optional[SimulationService] = None,
 ) -> PlannerDecision:
     """Pick the policy minimizing median simulated makespan for a workload of
     ``work_per_group × p`` units starting concentrated (the paper's W)."""
+    svc = service if service is not None else default_service()
     W = work_per_group * topo.p
-    rows: List[Tuple] = []
-    best = None
-    for strat, mwt, (ts, tc) in itertools.product(strategies, mwt_opts, thetas):
+    lam_cell = (topo.lam_local, topo.lam_remote)
+
+    queries = []
+    combos: List[Tuple[int, bool, float]] = []
+    for strat, mwt in itertools.product(strategies, mwt_opts):
+        t = topo.with_strategy(strat)
         rps = remote_probs if strat == topo_mod.LOCAL_FIRST else (0.25,)
         for rp in rps:
-            t = topo.with_strategy(strat, remote_prob=rp)
-            model = make_model(
-                "divisible", topology=t, mwt=mwt,
-                max_events=dv.default_max_events(W, topo.p,
-                                                 max(topo.lam_remote, 1)))
-            scn = eng.batch_scenarios(
-                W, np.arange(reps, dtype=np.uint32) + seed0,
-                lam_local=topo.lam_local, lam_remote=topo.lam_remote,
-                theta_static=ts, theta_comm=tc, remote_prob=rp)
-            res = eng.simulate_batch(model, scn)
-            ok = ~np.asarray(res.overflow)
-            med = float(np.median(np.asarray(res.makespan)[ok])) if ok.any() else np.inf
+            queries.append(svc.make_query(
+                t, W_list=[W], lam_list=[lam_cell], theta=tuple(thetas),
+                reps=reps, seed0=seed0, remote_prob=rp, mwt=mwt))
+            combos.append((strat, mwt, rp))
+
+    before = svc.n_dispatches
+    results = svc.query_many(queries)
+
+    rows: List[Tuple] = []
+    best = None
+    for (strat, mwt, rp), res in zip(combos, results):
+        cells = res.cells
+        for c in range(len(cells)):
+            med = float(cells.median[c])
+            if not np.isfinite(med):
+                med = np.inf          # every rep overflowed
+            ts, tc = int(cells.theta_static[c]), int(cells.theta_comm[c])
             rows.append((topo_mod.strategy_name(strat), mwt, ts, tc, rp, med))
             if best is None or med < best[0]:
                 best = (med, strat, rp, ts, tc, mwt)
@@ -79,13 +104,14 @@ def plan(
     return PlannerDecision(
         strategy=strat, remote_prob=rp, theta_static=ts, theta_comm=tc,
         mwt=mwt, expected_makespan=med, baseline_makespan=baseline,
-        table=tuple(rows))
+        table=tuple(rows), n_dispatches=svc.n_dispatches - before)
 
 
 def plan_for_mesh(n_pods: int, chips_per_pod: int, *, ici_delay: int = 1,
                   dcn_delay: int = 40, work_per_group: int = 4096,
                   groups_per_pod: Optional[int] = None,
-                  reps: int = 16) -> PlannerDecision:
+                  reps: int = 16,
+                  service: Optional[SimulationService] = None) -> PlannerDecision:
     """Convenience: physical fleet -> topology -> policy.
 
     ``groups_per_pod`` defaults to chips_per_pod//8 (one group per 8-chip
@@ -93,4 +119,4 @@ def plan_for_mesh(n_pods: int, chips_per_pod: int, *, ici_delay: int = 1,
     """
     g = groups_per_pod or max(chips_per_pod // 8, 1)
     topo = tpu_fleet(n_pods, g, ici_delay=ici_delay, dcn_delay=dcn_delay)
-    return plan(topo, work_per_group, reps=reps)
+    return plan(topo, work_per_group, reps=reps, service=service)

@@ -1,0 +1,114 @@
+"""SimulationService: the public facade of the sweep service (DESIGN.md §5).
+
+Turns the raw batched simulator into a query-answering system: callers ask
+questions (a topology, a scenario grid, a statistical target) and get
+per-cell estimates with confidence intervals back; the service routes every
+question through the content-addressed store (repeat questions are free),
+the coalescing broker (concurrent questions share device programs) and the
+adaptive estimator (replication stops when the requested precision is met).
+
+    svc = SimulationService()
+    r = svc.query(one_cluster(64, 50), W_list=[10**6], lam_list=[50],
+                  ci=0.01, ci_relative=True)       # 1% CI on E[Cmax]
+    r.cells.mean, r.cells.half_width, r.cells.n
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from repro.core import engine as eng
+from repro.core.sweep import lam_pair, resolve_model
+from repro.core.topology import Topology
+from repro.service.broker import QueryBroker, QueryResult, SimQuery
+from repro.service.estimator import AdaptivePolicy
+from repro.service.store import ResultStore
+
+
+class SimulationService:
+    """Facade wiring store + broker + estimator behind two calls:
+    :meth:`query` (one question) and :meth:`query_many` (a coalesced batch).
+    """
+
+    def __init__(self, store: Optional[ResultStore] = None,
+                 root: Optional[os.PathLike] = None,
+                 mesh=None, shard_axes: Sequence[str] = ("data",),
+                 confidence: float = 0.95, pad_pow2: bool = True):
+        self.store = store if store is not None else ResultStore(root=root)
+        self.broker = QueryBroker(store=self.store, mesh=mesh,
+                                  shard_axes=shard_axes,
+                                  confidence=confidence, pad_pow2=pad_pow2)
+        self.confidence = float(confidence)
+
+    # -- query construction -------------------------------------------------
+
+    def make_query(
+        self,
+        topology: Topology,
+        *,
+        task_model="divisible",
+        W_list: Sequence[int] = (0,),
+        lam_list: Sequence = (1,),
+        theta: Sequence = ((0, 0),),
+        reps: int = 16,
+        seed0: int = 1,
+        remote_prob: float = 0.25,
+        ci=None,
+        ci_relative: bool = False,
+        batch_reps: int = 16,
+        max_reps: int = 1024,
+        mwt: bool = False,
+        max_events: Optional[int] = None,
+        **model_kw,
+    ) -> SimQuery:
+        """Build a SimQuery. ``ci`` switches on adaptive estimation: either a
+        target CI half-width (absolute time units, or a fraction of the mean
+        when ``ci_relative``) or a full :class:`AdaptivePolicy`."""
+        lam_flat = [l for entry in lam_list for l in lam_pair(entry)]
+        model = resolve_model(topology, task_model, W_list=W_list,
+                              lam_list=lam_flat, mwt=mwt,
+                              max_events=max_events, pow2_max_events=True,
+                              **model_kw)
+        if isinstance(ci, AdaptivePolicy):
+            adaptive = ci
+        elif ci is not None:
+            adaptive = AdaptivePolicy(
+                ci_half_width=float(ci), relative=ci_relative,
+                confidence=self.confidence, batch_reps=batch_reps,
+                max_reps=max_reps)
+        else:
+            adaptive = None
+        return SimQuery(
+            model=model,
+            W_list=tuple(int(w) for w in W_list),
+            lam_list=tuple(
+                tuple(l) if isinstance(l, (tuple, list)) else int(l)
+                for l in lam_list),
+            theta=tuple((int(a), int(b)) for a, b in theta),
+            reps=int(reps), seed0=int(seed0),
+            remote_prob=float(remote_prob), adaptive=adaptive)
+
+    # -- execution ----------------------------------------------------------
+
+    def query(self, topology: Topology, **kw) -> QueryResult:
+        """Ask one question (cache -> coalesce -> simulate -> estimate)."""
+        return self.query_many([self.make_query(topology, **kw)])[0]
+
+    def query_many(self, queries: Sequence[SimQuery]) -> List[QueryResult]:
+        """Answer a batch of concurrent questions in one coalesced flush."""
+        for q in queries:
+            self.broker.submit(q)
+        return self.broker.flush()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_dispatches(self) -> int:
+        return self.broker.n_dispatches
+
+    def stats(self) -> dict:
+        return dict(store=self.store.stats(),
+                    n_dispatches=self.broker.n_dispatches,
+                    n_cache_hits=self.broker.n_cache_hits,
+                    n_queries=self.broker.n_queries,
+                    engine_version=eng.ENGINE_VERSION)

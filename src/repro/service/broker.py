@@ -1,0 +1,283 @@
+"""Query broker: coalescing concurrent sweep questions (DESIGN.md §5).
+
+Many callers ask the simulator small questions at once (the planner alone
+asks one per policy combination). Dispatching each as its own device program
+wastes the batched core. The broker instead:
+
+1. answers every query it can from the content-addressed store;
+2. groups the remaining queries into *buckets* of identical static
+   configuration — the same ``TaskModel`` (topology, strategy, MWT, caps)
+   and the same ``remote_prob`` scalar — because only static config forces
+   a separate compiled program; everything else (W, λ, θ, seed) is a
+   traced per-row scenario field;
+3. concatenates every bucket's pending rows into ONE batched sweep, padded
+   to the next power of two (padding rows are W=1 scenarios, which
+   terminate immediately; pow-2 padding bounds the number of distinct batch
+   shapes XLA ever compiles), and dispatches it through ``core/sweep``;
+4. fans the per-row results back to each query, rounds the adaptive
+   estimator, and persists each finished answer in the store.
+
+Adaptive queries participate in the same rounds: round r of every pending
+query lands in the same bucket dispatch, so N concurrent adaptive queries
+still cost one device program per (bucket, round).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.sweep import (GridResult, GridRows, canonical_grid,
+                              concat_grids, grid_rows, run_rows)
+from repro.core.topology import remote_prob_u32
+from repro.service import store as store_mod
+from repro.service.estimator import (AdaptivePolicy, CellTable, Welford,
+                                     cell_index, summarize_cells,
+                                     unique_cells)
+from repro.service.store import ResultStore
+
+
+@dataclasses.dataclass(frozen=True)
+class SimQuery:
+    """One sweep question: a task model + a scenario grid + a stopping rule.
+
+    ``reps`` is the fixed ensemble size when ``adaptive`` is None; with an
+    :class:`AdaptivePolicy` it is ignored and replication is driven by the
+    CI target instead.
+    """
+    model: eng.TaskModel
+    W_list: Tuple[int, ...] = (0,)
+    lam_list: Tuple = (1,)
+    theta: Tuple[Tuple[int, int], ...] = ((0, 0),)
+    reps: int = 16
+    seed0: int = 1
+    remote_prob: float = 0.25
+    adaptive: Optional[AdaptivePolicy] = None
+
+    def grid_dict(self) -> dict:
+        reps = self.adaptive.batch_reps if self.adaptive else self.reps
+        return canonical_grid(self.W_list, self.lam_list, reps,
+                              theta=self.theta, seed0=self.seed0,
+                              remote_prob=self.remote_prob)
+
+    def key(self) -> str:
+        extra = {"adaptive": self.adaptive.canonical()} if self.adaptive \
+            else None
+        return store_mod.query_key(self.model, self.grid_dict(), extra=extra)
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.W_list) * len(self.lam_list) * len(self.theta)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Answer to a SimQuery: every Monte-Carlo sample gathered (over all
+    adaptive rounds) plus the per-cell statistical summary."""
+    key: str
+    grid: GridResult
+    cells: CellTable
+    from_cache: bool
+    n_rounds: int
+
+    @property
+    def total_reps(self) -> int:
+        return len(self.grid)
+
+    def converged(self, policy: AdaptivePolicy) -> np.ndarray:
+        target = policy.ci_half_width * (
+            np.abs(self.cells.mean) if policy.relative else 1.0)
+        return (self.cells.half_width <= target) & (self.cells.n
+                                                    >= policy.min_reps)
+
+
+class _Pending:
+    """Per-query round state machine inside one flush."""
+
+    def __init__(self, query: SimQuery, confidence: float):
+        self.query = query
+        self.confidence = confidence
+        self.parts: List[GridResult] = []
+        self.round = 0
+        self.welford = Welford.zeros(query.n_cells)
+        self._active_cells: Optional[np.ndarray] = None  # adaptive round mask
+        # Rounds are capped so a pathological cell that only ever overflows
+        # (contributing no valid samples, hence never converging) cannot
+        # spin the flush loop forever.
+        self._max_rounds = (
+            -(-query.adaptive.max_reps // query.adaptive.batch_reps)
+            if query.adaptive else 1)
+
+    def next_rows(self) -> Optional[GridRows]:
+        """Rows this query wants simulated next, or None when finished."""
+        q = self.query
+        if self.round >= self._max_rounds:
+            return None
+        if q.adaptive is None:
+            return grid_rows(q.W_list, q.lam_list, q.reps, q.theta,
+                             seed0=q.seed0)
+        pending = q.adaptive.unconverged(self.welford)
+        if not pending.any():
+            self._active_cells = None
+            return None
+        # Fresh seed batch for every still-pending cell: the full-grid rows
+        # for stream=round are deterministic regardless of which cells are
+        # active, so seeds never depend on the convergence pattern.
+        full = grid_rows(q.W_list, q.lam_list, q.adaptive.batch_reps, q.theta,
+                         seed0=q.seed0, stream=self.round)
+        _, inv = _rows_cell_index(full)
+        keep = pending[inv]
+        self._active_cells = inv[keep]
+        return GridRows(*(np.asarray(a)[keep] for a in full))
+
+    def feed(self, grid: GridResult):
+        self.parts.append(grid)
+        ok = ~np.asarray(grid.overflow, bool)
+        if self.query.adaptive is None:
+            _, inv = cell_index(grid)
+        else:
+            inv = self._active_cells
+        self.welford.update(np.asarray(inv)[ok],
+                            np.asarray(grid.makespan)[ok])
+        self.round += 1
+
+    def result(self, key: str) -> QueryResult:
+        grid = concat_grids(self.parts)
+        return QueryResult(key=key, grid=grid,
+                           cells=summarize_cells(grid, self.confidence),
+                           from_cache=False, n_rounds=self.round)
+
+
+def _rows_cell_index(rows: GridRows):
+    cols = np.stack([rows.W, rows.lam_local, rows.lam_remote,
+                     rows.theta_static, rows.theta_comm], axis=1)
+    return unique_cells(cols)
+
+
+def _concat_rows(parts: Sequence[GridRows]) -> GridRows:
+    return GridRows(*(np.concatenate([np.asarray(getattr(r, f))
+                                      for r in parts])
+                      for f in GridRows._fields))
+
+
+def _pad_rows(rows: GridRows, target: int) -> GridRows:
+    """Pad with W=1 filler scenarios (terminate after one event cycle)."""
+    pad = target - len(rows)
+    if pad <= 0:
+        return rows
+    filler = GridRows(
+        W=np.ones(pad, np.int32),
+        lam_local=np.ones(pad, np.int32),
+        lam_remote=np.ones(pad, np.int32),
+        theta_static=np.zeros(pad, np.int32),
+        theta_comm=np.zeros(pad, np.int32),
+        seed=np.ones(pad, np.uint32),
+    )
+    return _concat_rows([rows, filler])
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+class QueryBroker:
+    """Accepts concurrent SimQuerys, coalesces, dispatches, fans back."""
+
+    def __init__(self, store: Optional[ResultStore] = None,
+                 dispatch=None, pad_pow2: bool = True,
+                 confidence: float = 0.95, mesh=None,
+                 shard_axes: Sequence[str] = ("data",)):
+        self.store = store if store is not None else ResultStore()
+        self.pad_pow2 = pad_pow2
+        self.confidence = float(confidence)
+        self._dispatch = dispatch or (
+            lambda model, rows, rp: run_rows(model, rows, remote_prob=rp,
+                                             mesh=mesh,
+                                             shard_axes=shard_axes))
+        self._queue: List[SimQuery] = []
+        # Telemetry for the service_throughput bench / coalescing tests.
+        self.n_dispatches = 0
+        self.n_cache_hits = 0
+        self.n_queries = 0
+        self.dispatch_log: List[dict] = []
+
+    def submit(self, query: SimQuery) -> int:
+        """Enqueue; returns the query's position for the next flush()."""
+        self._queue.append(query)
+        return len(self._queue) - 1
+
+    def flush(self) -> List[QueryResult]:
+        """Answer every queued query; one dispatch per (bucket, round)."""
+        queue, self._queue = self._queue, []
+        self.n_queries += len(queue)
+        results: List[Optional[QueryResult]] = [None] * len(queue)
+        pendings: Dict[int, _Pending] = {}
+        key_owner: Dict[str, int] = {}   # identical questions share one run
+        aliases: Dict[int, int] = {}
+        keys = [q.key() for q in queue]
+
+        for i, (q, key) in enumerate(zip(queue, keys)):
+            grid = self.store.get(key)
+            if grid is not None:
+                self.n_cache_hits += 1
+                results[i] = QueryResult(
+                    key=key, grid=grid,
+                    cells=summarize_cells(grid, self.confidence),
+                    from_cache=True, n_rounds=0)
+            elif key in key_owner:
+                aliases[i] = key_owner[key]
+            else:
+                key_owner[key] = i
+                pendings[i] = _Pending(q, self.confidence)
+
+        while True:
+            # bucket -> [(pending index, rows)]
+            buckets: Dict[Tuple, List[Tuple[int, GridRows]]] = {}
+            for i, pend in pendings.items():
+                if results[i] is not None:
+                    continue
+                rows = pend.next_rows()
+                if rows is None:
+                    results[i] = pend.result(keys[i])
+                    self.store.put(keys[i], results[i].grid,
+                                   meta={"grid": pend.query.grid_dict(),
+                                         "model": store_mod.canonical_model(
+                                             pend.query.model)})
+                    continue
+                bkey = (pend.query.model,
+                        remote_prob_u32(float(pend.query.remote_prob)))
+                buckets.setdefault(bkey, []).append((i, rows))
+            if not buckets:
+                break
+            for (model, _rp_u32), members in buckets.items():
+                rp = pendings[members[0][0]].query.remote_prob
+                rows = _concat_rows([r for _, r in members])
+                n = len(rows)
+                padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 \
+                    else rows
+                grid = self._dispatch(model, padded, rp)
+                self.n_dispatches += 1
+                self.dispatch_log.append(dict(
+                    n_queries=len(members), n_rows=n, n_padded=len(padded)))
+                off = 0
+                for i, rws in members:
+                    part = _slice_grid(grid, off, off + len(rws))
+                    pendings[i].feed(part)
+                    off += len(rws)
+
+        for i, owner in aliases.items():
+            src = results[owner]
+            results[i] = dataclasses.replace(src, from_cache=True)
+        return results
+
+
+def _slice_grid(grid: GridResult, lo: int, hi: int) -> GridResult:
+    fields = {
+        f.name: np.asarray(getattr(grid, f.name))[lo:hi]
+        for f in dataclasses.fields(GridResult)
+        if f.name not in ("p", "extras")
+    }
+    extras = {k: np.asarray(v)[lo:hi] for k, v in grid.extras.items()}
+    return GridResult(p=grid.p, extras=extras, **fields)

@@ -1,0 +1,221 @@
+"""Streaming Monte-Carlo estimation (DESIGN.md §5).
+
+The paper reports distributional statistics of Cmax over fixed-size
+Monte-Carlo ensembles ("1000 simulations per point"). Following the latency
+analysis of Gast–Khatiri–Trystram, the service instead treats each grid cell
+as a streaming estimation problem: a Welford/Chan accumulator maintains mean
+and variance of the makespan per cell, a normal-approximation confidence
+interval is attached to the running mean, and *adaptive replication* keeps
+submitting fresh seed batches through the batched core only for cells whose
+CI half-width still exceeds the requested target. Easy cells (low variance —
+e.g. low λ, big W/p) stop after ``min_reps``; hard cells get the replication
+budget a fixed-``reps`` sweep would have wasted uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.sweep import GridResult
+
+
+def z_value(confidence: float) -> float:
+    """Two-sided normal quantile z with P(|Z| <= z) = confidence.
+
+    Acklam's rational approximation of the inverse normal CDF (|rel err| <
+    1.2e-9) — keeps the estimator dependency-free and deterministic.
+    """
+    p = 0.5 + 0.5 * float(confidence)
+    if not 0.5 < p < 1.0:
+        raise ValueError(f"confidence must be in (0, 1), got {confidence}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    if p < 0.97575:
+        q = p - 0.5
+        r = q * q
+        num = ((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]
+        den = ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1.0
+        return num * q / den
+    q = math.sqrt(-2.0 * math.log(1.0 - p))
+    num = ((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]
+    den = (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0
+    return -num / den    # upper tail: the c/d rational gives the lower tail
+
+
+@dataclasses.dataclass
+class Welford:
+    """Vectorized Welford accumulator over a fixed set of cells, merged
+    batch-at-a-time with Chan's parallel-update formula."""
+    n: np.ndarray       # int64[cells]
+    mean: np.ndarray    # float64[cells]
+    m2: np.ndarray      # float64[cells]
+
+    @classmethod
+    def zeros(cls, n_cells: int) -> "Welford":
+        return cls(n=np.zeros(n_cells, np.int64),
+                   mean=np.zeros(n_cells, np.float64),
+                   m2=np.zeros(n_cells, np.float64))
+
+    def update(self, cell_idx: np.ndarray, values: np.ndarray):
+        """Fold ``values`` (grouped by ``cell_idx``) into the accumulator."""
+        cell_idx = np.asarray(cell_idx)
+        values = np.asarray(values, np.float64)
+        for c in np.unique(cell_idx):
+            x = values[cell_idx == c]
+            nb = x.shape[0]
+            if nb == 0:
+                continue
+            mb = float(x.mean())
+            m2b = float(((x - mb) ** 2).sum())
+            na = int(self.n[c])
+            delta = mb - self.mean[c]
+            n = na + nb
+            self.mean[c] += delta * nb / n
+            self.m2[c] += m2b + delta * delta * na * nb / n
+            self.n[c] = n
+
+    def var(self) -> np.ndarray:
+        """Unbiased sample variance; NaN below two samples."""
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(self.n > 1, self.m2 / np.maximum(self.n - 1, 1),
+                            np.nan)
+
+    def half_width(self, confidence: float = 0.95) -> np.ndarray:
+        """Normal-approx CI half-width of the mean; inf below two samples."""
+        with np.errstate(invalid="ignore", divide="ignore"):
+            hw = z_value(confidence) * np.sqrt(self.var() / np.maximum(self.n, 1))
+        return np.where(self.n > 1, hw, np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePolicy:
+    """Adaptive-stopping criterion: replicate until the CI half-width of the
+    mean makespan is below ``ci_half_width`` in every cell (absolute units,
+    or a fraction of the running mean when ``relative``)."""
+    ci_half_width: float
+    relative: bool = False
+    confidence: float = 0.95
+    batch_reps: int = 16          # fresh seeds per round per pending cell
+    min_reps: int = 8             # floor before the variance is trusted
+    max_reps: int = 1024          # per-cell hard budget cap
+
+    def canonical(self) -> dict:
+        """JSON-able form for store keying (float targets are rounded to a
+        fixed decimal encoding so keys never depend on repr vagaries)."""
+        return {
+            "ci_half_width": f"{float(self.ci_half_width):.9e}",
+            "relative": bool(self.relative),
+            "confidence": f"{float(self.confidence):.9e}",
+            "batch_reps": int(self.batch_reps),
+            "min_reps": int(self.min_reps),
+            "max_reps": int(self.max_reps),
+        }
+
+    def unconverged(self, w: Welford) -> np.ndarray:
+        """Bool mask of cells that still need replication this round."""
+        hw = w.half_width(self.confidence)
+        target = self.ci_half_width * (np.abs(w.mean) if self.relative
+                                       else 1.0)
+        need = (w.n < self.min_reps) | (hw > target)
+        return need & (w.n < self.max_reps)
+
+    def converged(self, w: Welford) -> np.ndarray:
+        hw = w.half_width(self.confidence)
+        target = self.ci_half_width * (np.abs(w.mean) if self.relative
+                                       else 1.0)
+        return (w.n >= self.min_reps) & (hw <= target)
+
+
+@dataclasses.dataclass
+class CellTable:
+    """Per-cell summary of a GridResult: one row per unique
+    (W, lam_local, lam_remote, theta) cell, in order of first appearance."""
+    W: np.ndarray
+    lam_local: np.ndarray
+    lam_remote: np.ndarray
+    theta_static: np.ndarray
+    theta_comm: np.ndarray
+    n: np.ndarray             # valid (non-overflow) samples
+    n_overflow: np.ndarray
+    mean: np.ndarray
+    std: np.ndarray
+    half_width: np.ndarray
+    median: np.ndarray
+    confidence: float
+
+    def __len__(self):
+        return int(self.W.shape[0])
+
+
+def unique_cells(cols: np.ndarray):
+    """(unique rows of ``cols`` in first-appearance order, per-row cell
+    index). The single definition of cell identity/ordering — the broker's
+    round bookkeeping and the estimator's summaries must agree on it, so
+    both call this."""
+    _, first, inv = np.unique(cols, axis=0, return_index=True,
+                              return_inverse=True)
+    # np.unique sorts; remap to first-appearance order.
+    order = np.argsort(first)
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.shape[0])
+    return cols[np.sort(first)], rank[inv]
+
+
+def cell_index(grid: GridResult):
+    """Cell identity columns (W, λ_local, λ_remote, θs, θc) of a GridResult."""
+    lam_local = grid.extras.get("lam_local", grid.lam)
+    cols = np.stack([grid.W, lam_local, grid.lam,
+                     grid.theta_static, grid.theta_comm], axis=1)
+    return unique_cells(cols)
+
+
+def summarize_cells(grid: GridResult, confidence: float = 0.95) -> CellTable:
+    """Fold a (possibly multi-round) GridResult into per-cell statistics.
+
+    Overflow rows (hit ``max_events`` / capacity halt) carry no valid
+    makespan; they are excluded from the estimate and counted separately.
+    """
+    cells, inv = cell_index(grid)
+    k = cells.shape[0]
+    w = Welford.zeros(k)
+    ok = ~np.asarray(grid.overflow, bool)
+    w.update(inv[ok], np.asarray(grid.makespan)[ok])
+    median = np.full(k, np.nan)
+    n_overflow = np.zeros(k, np.int64)
+    ms = np.asarray(grid.makespan, np.float64)
+    for c in range(k):
+        sel = (inv == c) & ok
+        if sel.any():
+            median[c] = float(np.median(ms[sel]))
+        n_overflow[c] = int(((inv == c) & ~ok).sum())
+    std = np.sqrt(w.var())
+    return CellTable(
+        W=cells[:, 0], lam_local=cells[:, 1], lam_remote=cells[:, 2],
+        theta_static=cells[:, 3], theta_comm=cells[:, 4],
+        n=w.n, n_overflow=n_overflow, mean=w.mean, std=std,
+        half_width=w.half_width(confidence), median=median,
+        confidence=float(confidence),
+    )
+
+
+def fixed_reps_for_width(std: float, half_width: float,
+                         confidence: float = 0.95) -> int:
+    """Replications a fixed-``reps`` sweep needs for the same CI width — the
+    baseline the adaptive estimator is judged against in the
+    ``service_throughput`` bench: n >= (z·σ / h)²."""
+    if half_width <= 0:
+        raise ValueError("half_width must be positive")
+    z = z_value(confidence)
+    return max(int(math.ceil((z * float(std) / float(half_width)) ** 2)), 2)

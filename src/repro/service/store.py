@@ -1,0 +1,192 @@
+"""Content-addressed result store (DESIGN.md §5).
+
+Every sweep the service ever ran is addressable by a canonical sha256 of the
+*question* — (engine version, task-model config, topology, grid spec) — and
+cached forever under ``artifacts/store/``: a repeated query is a disk read,
+a repeated query in the same process is a dict lookup (in-process LRU in
+front of the disk tier). Keys are computed from canonical JSON (sorted keys,
+arrays folded to (dtype, shape, bytes) digests), never from Python ``hash``
+(which is salted per process), so they are stable across processes, hosts
+and sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.sweep import GridResult, as_model
+from repro.core.topology import Topology, remote_prob_u32
+
+#: Default disk tier location: <repo>/artifacts/store.
+DEFAULT_ROOT = Path(__file__).resolve().parents[3] / "artifacts" / "store"
+
+_GRID_FIELDS = ("W", "lam", "theta_static", "theta_comm", "seed", "makespan",
+                "n_requests", "n_success", "n_fail", "total_idle",
+                "startup_end", "overflow")
+
+
+def _arr_digest(a) -> str:
+    """Content digest of an array: dtype + shape + raw bytes."""
+    a = np.ascontiguousarray(np.asarray(a))
+    h = hashlib.sha256()
+    h.update(str(a.dtype.str).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def canonical_topology(t: Topology) -> dict:
+    return {
+        "cluster_id": _arr_digest(t.cluster_id),
+        "hops": _arr_digest(t.hops),
+        "lam_local": int(t.lam_local),
+        "lam_remote": int(t.lam_remote),
+        "strategy": int(t.strategy),
+        "remote_prob_u32": remote_prob_u32(float(t.remote_prob)),
+        "name": str(t.name),
+    }
+
+
+def canonical_model(model) -> dict:
+    """Canonical JSON-able form of a TaskModel's full static config."""
+    model = as_model(model)
+    out: Dict[str, object] = {"kind": type(model).__name__}
+    for f in dataclasses.fields(model.cfg):
+        v = getattr(model.cfg, f.name)
+        if f.name == "topology":
+            out[f.name] = canonical_topology(v)
+        elif f.name == "dag":
+            out[f.name] = {
+                "dur": _arr_digest(v.dur),
+                "child_ptr": _arr_digest(v.child_ptr),
+                "child_idx": _arr_digest(v.child_idx),
+                "name": str(v.name),
+            }
+        elif v is None or isinstance(v, (bool, str)):
+            out[f.name] = v
+        elif isinstance(v, (int, np.integer)):
+            out[f.name] = int(v)
+        elif isinstance(v, (float, np.floating)):
+            # No float configs exist today; fail loud rather than hash
+            # representation-dependent text if one appears.
+            raise TypeError(f"float config field {f.name} needs a canonical "
+                            "fixed-point encoding")
+        else:
+            raise TypeError(f"unhashable config field {f.name}: {type(v)!r}")
+    return out
+
+
+def query_key(model, grid: dict, extra: Optional[dict] = None) -> str:
+    """Content address of a sweep question. ``grid`` is the canonical grid
+    dict from :func:`repro.core.sweep.canonical_grid`; ``extra`` carries
+    layers above the raw sweep (e.g. the adaptive-estimation policy)."""
+    payload = {
+        "engine_version": eng.ENGINE_VERSION,
+        "model": canonical_model(model),
+        "grid": grid,
+    }
+    if extra:
+        payload["extra"] = extra
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _grid_to_npz(grid: GridResult) -> Dict[str, np.ndarray]:
+    d = {name: np.asarray(getattr(grid, name)) for name in _GRID_FIELDS}
+    d["p"] = np.asarray(grid.p, np.int32)
+    for k, v in grid.extras.items():
+        d[f"extra__{k}"] = np.asarray(v)
+    return d
+
+
+def _grid_from_npz(d) -> GridResult:
+    extras = {k[len("extra__"):]: d[k] for k in d.files
+              if k.startswith("extra__")}
+    return GridResult(p=int(d["p"]), extras=extras,
+                      **{name: d[name] for name in _GRID_FIELDS})
+
+
+class ResultStore:
+    """Two-tier (LRU dict over npz files) content-addressed GridResult store.
+
+    Writes are atomic (tmp file + ``os.replace``) so concurrent processes
+    sharing ``root`` can only ever observe complete artifacts; a ``.json``
+    sidecar stores the canonical question next to each answer for
+    debuggability.
+    """
+
+    def __init__(self, root: Optional[os.PathLike] = None,
+                 lru_capacity: int = 128):
+        self.root = Path(root) if root is not None else DEFAULT_ROOT
+        self.lru_capacity = int(lru_capacity)
+        self._lru: "OrderedDict[str, GridResult]" = OrderedDict()
+        self.hits_mem = 0
+        self.hits_disk = 0
+        self.misses = 0
+        self.puts = 0
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.npz"
+
+    def get(self, key: str) -> Optional[GridResult]:
+        g = self._lru.get(key)
+        if g is not None:
+            self._lru.move_to_end(key)
+            self.hits_mem += 1
+            return g
+        path = self._path(key)
+        if path.exists():
+            with np.load(path) as d:
+                g = _grid_from_npz(d)
+            self._remember(key, g)
+            self.hits_disk += 1
+            return g
+        self.misses += 1
+        return None
+
+    def put(self, key: str, grid: GridResult,
+            meta: Optional[dict] = None) -> Path:
+        self.root.mkdir(parents=True, exist_ok=True)
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(f, **_grid_to_npz(grid))
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        if meta is not None:
+            path.with_suffix(".json").write_text(
+                json.dumps(meta, sort_keys=True, indent=1))
+        self._remember(key, grid)
+        self.puts += 1
+        return path
+
+    def _remember(self, key: str, grid: GridResult):
+        self._lru[key] = grid
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.lru_capacity:
+            self._lru.popitem(last=False)
+
+    def contains(self, key: str) -> bool:
+        return key in self._lru or self._path(key).exists()
+
+    def clear_memory(self):
+        """Drop the in-process tier (the disk tier keeps serving)."""
+        self._lru.clear()
+
+    def stats(self) -> dict:
+        return dict(hits_mem=self.hits_mem, hits_disk=self.hits_disk,
+                    misses=self.misses, puts=self.puts,
+                    lru_len=len(self._lru))

@@ -13,7 +13,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import SHAPES, get_config
 from repro.launch import hlo_analysis as ha
 from repro.launch import sharding as shd
-from repro.launch.mesh import dp_axes, make_test_mesh
+from repro.launch.mesh import dp_axes, make_test_mesh, use_mesh
 from repro.launch.steps import lower_cell, plan_cell
 from repro.models import build_model
 
@@ -56,7 +56,7 @@ def test_plan_and_lower_cell_tiny_mesh(kind):
     try:
         mesh = make_test_mesh((1, 1), ("data", "model"))
         plan = plan_cell("qwen3-1.7b", "_tmp", mesh, cfg_overrides=REDUCED)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = lower_cell(plan)
             compiled = lowered.compile()
         assert compiled.memory_analysis() is not None

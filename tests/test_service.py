@@ -1,0 +1,303 @@
+"""Sweep service (DESIGN.md §5): store, estimator, broker, facade.
+
+Covers the subsystem's contract surface: content-addressed keys are stable
+across processes and sensitive to every config layer; GridResults round-trip
+the disk tier bit-exactly; the Welford estimator matches numpy and its CI
+shrinks as 1/sqrt(n); concurrent compatible queries coalesce into one
+dispatch; a repeated query is answered with ZERO simulator dispatches; and
+chunked sweep execution is bit-identical to one-shot execution.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import one_cluster, two_clusters
+from repro.core.sweep import (canonical_grid, concat_grids, grid_rows,
+                              resolve_model, run_grid)
+from repro.service import (AdaptivePolicy, ResultStore, SimulationService,
+                           Welford, query_key, z_value)
+from repro.service.broker import QueryBroker
+from repro.service.estimator import fixed_reps_for_width, summarize_cells
+
+TOPO = one_cluster(4, 2)
+
+
+def _svc(tmp_path, **kw) -> SimulationService:
+    return SimulationService(root=tmp_path / "store", **kw)
+
+
+def _small_query(svc, **kw):
+    args = dict(W_list=[4000], lam_list=[2, 5], reps=4, seed0=3)
+    args.update(kw)
+    return svc.make_query(TOPO, **args)
+
+
+# ---------------------------------------------------------------------------
+# store: round-trip, key stability, key sensitivity
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_bit_exact(tmp_path):
+    g = run_grid(TOPO, W_list=[3000], lam_list=[2, 5], reps=3)
+    store = ResultStore(root=tmp_path)
+    store.put("k1", g, meta={"note": "test"})
+    store.clear_memory()                       # force the disk tier
+    g2 = store.get("k1")
+    assert store.hits_disk == 1
+    assert g2.p == g.p
+    for name in ("W", "lam", "theta_static", "theta_comm", "seed",
+                 "makespan", "n_requests", "n_success", "n_fail",
+                 "total_idle", "startup_end", "overflow"):
+        assert np.array_equal(getattr(g2, name), getattr(g, name)), name
+    assert set(g2.extras) == set(g.extras)
+    for k in g.extras:
+        assert np.array_equal(g2.extras[k], g.extras[k]), k
+    # in-memory tier serves the next get
+    assert store.get("k1") is g2
+    assert store.hits_mem == 1
+
+
+_KEY_SCRIPT = """
+import sys
+from repro.core import one_cluster
+from repro.core.sweep import canonical_grid, resolve_model
+from repro.service import query_key
+model = resolve_model(one_cluster(4, 2), "divisible", W_list=[4000],
+                      lam_list=[2, 5], pow2_max_events=True)
+grid = canonical_grid([4000], [2, 5], 4, seed0=3)
+print(query_key(model, grid))
+"""
+
+
+def test_store_key_stable_across_processes():
+    """Keys must survive process boundaries (no salted Python hash; array
+    content digests) — the store is shared by many workers forever."""
+    model = resolve_model(TOPO, "divisible", W_list=[4000], lam_list=[2, 5],
+                          pow2_max_events=True)
+    key_here = query_key(model, canonical_grid([4000], [2, 5], 4, seed0=3))
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _KEY_SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu", "HOME": "/tmp"})
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == key_here
+
+
+def test_store_key_sensitivity():
+    grid = canonical_grid([4000], [2, 5], 4, seed0=3)
+    m = resolve_model(TOPO, "divisible", W_list=[4000], lam_list=[2, 5])
+    base = query_key(m, grid)
+    # grid layer
+    assert query_key(m, canonical_grid([4000], [2, 5], 5, seed0=3)) != base
+    assert query_key(m, canonical_grid([4000], [2, 5], 4, seed0=4)) != base
+    # model layer: different MWT / topology / strategy
+    m2 = resolve_model(TOPO, "divisible", W_list=[4000], lam_list=[2, 5],
+                       mwt=True)
+    assert query_key(m2, grid) != base
+    m3 = resolve_model(two_clusters(4, 8), "divisible", W_list=[4000],
+                       lam_list=[2, 5])
+    assert query_key(m3, grid) != base
+    # adaptive policy rides in the extra layer
+    pol = AdaptivePolicy(ci_half_width=0.5)
+    assert query_key(m, grid, extra={"adaptive": pol.canonical()}) != base
+    # engine version is part of the address
+    old = eng.ENGINE_VERSION
+    try:
+        eng.ENGINE_VERSION = old + 1
+        assert query_key(m, grid) != base
+    finally:
+        eng.ENGINE_VERSION = old
+
+
+# ---------------------------------------------------------------------------
+# estimator: Welford vs numpy, CI shrinkage, adaptive policy
+# ---------------------------------------------------------------------------
+
+def test_welford_matches_numpy():
+    rng = np.random.default_rng(0)
+    w = Welford.zeros(3)
+    all_x = {0: [], 1: [], 2: []}
+    for _ in range(5):
+        idx = rng.integers(0, 3, size=40)
+        x = rng.normal(50.0, 7.0, size=40)
+        for c in range(3):
+            all_x[c].extend(x[idx == c])
+        w.update(idx, x)
+    for c in range(3):
+        xs = np.asarray(all_x[c])
+        assert w.n[c] == xs.size
+        assert w.mean[c] == pytest.approx(xs.mean(), rel=1e-12)
+        assert w.var()[c] == pytest.approx(xs.var(ddof=1), rel=1e-9)
+
+
+def test_z_value_table():
+    assert z_value(0.95) == pytest.approx(1.959964, abs=1e-4)
+    assert z_value(0.99) == pytest.approx(2.575829, abs=1e-4)
+    assert z_value(0.90) == pytest.approx(1.644854, abs=1e-4)
+
+
+def test_ci_shrinks_as_sqrt_n_and_adaptive_stops():
+    """Known-variance synthetic stream: the half-width must track
+    z*sigma/sqrt(n) and the policy must stop once the target is met."""
+    sigma, target = 8.0, 1.0
+    pol = AdaptivePolicy(ci_half_width=target, batch_reps=32, min_reps=8,
+                         max_reps=4096)
+    rng = np.random.default_rng(7)
+    w = Welford.zeros(1)
+    widths = []
+    rounds = 0
+    while pol.unconverged(w)[0]:
+        w.update(np.zeros(pol.batch_reps, int),
+                 rng.normal(100.0, sigma, pol.batch_reps))
+        widths.append(w.half_width(pol.confidence)[0])
+        rounds += 1
+        assert rounds < 100
+    assert w.half_width(pol.confidence)[0] <= target
+    assert widths[0] > widths[-1]              # CI shrank monotonically-ish
+    # stopped near the theoretical requirement, not at the max_reps cap
+    n_theory = fixed_reps_for_width(sigma, target, pol.confidence)
+    assert w.n[0] <= 2 * n_theory + pol.batch_reps
+    # and the expected ~1/sqrt(n) shape held at the end
+    expect = z_value(pol.confidence) * sigma / np.sqrt(w.n[0])
+    assert w.half_width(pol.confidence)[0] == pytest.approx(expect, rel=0.35)
+
+
+# ---------------------------------------------------------------------------
+# broker: coalescing, cache hits, adaptive through the real simulator
+# ---------------------------------------------------------------------------
+
+def test_broker_coalesces_concurrent_queries(tmp_path):
+    """N compatible concurrent queries -> exactly 1 sweep dispatch."""
+    svc = _svc(tmp_path)
+    qs = [_small_query(svc, theta=((0, t),), seed0=5 + t) for t in range(3)]
+    res = svc.query_many(qs)
+    assert svc.n_dispatches == 1
+    assert svc.broker.dispatch_log[0]["n_queries"] == 3
+    # fan-out returned each query its own rows, matching a direct solo run
+    for t, r in enumerate(res):
+        solo = run_grid(TOPO, W_list=[4000], lam_list=[2, 5], reps=4,
+                        theta=((0, t),), seed0=5 + t,
+                        task_model=qs[t].model)
+        assert np.array_equal(r.grid.makespan, solo.makespan)
+        assert np.array_equal(r.grid.seed, solo.seed)
+
+
+def test_repeated_query_zero_dispatches(tmp_path):
+    """Acceptance: a repeated query is answered from the store with zero
+    simulator dispatches — in-process (LRU) and cross-process (disk)."""
+    svc = _svc(tmp_path)
+    r1 = svc.query(TOPO, W_list=[4000], lam_list=[2, 5], reps=4, seed0=3)
+    assert svc.n_dispatches == 1 and not r1.from_cache
+
+    r2 = svc.query(TOPO, W_list=[4000], lam_list=[2, 5], reps=4, seed0=3)
+    assert svc.n_dispatches == 1                 # LRU hit: no new dispatch
+    assert r2.from_cache
+    assert np.array_equal(r1.grid.makespan, r2.grid.makespan)
+
+    # fresh service over the same root = new process; disk tier answers
+    svc2 = _svc(tmp_path)
+    r3 = svc2.query(TOPO, W_list=[4000], lam_list=[2, 5], reps=4, seed0=3)
+    assert svc2.n_dispatches == 0
+    assert r3.from_cache and svc2.store.hits_disk == 1
+    assert np.array_equal(r1.grid.makespan, r3.grid.makespan)
+
+
+def test_adaptive_query_meets_target_with_fewer_reps(tmp_path):
+    """Acceptance: adaptive replication reaches the CI target with fewer
+    total replications than the uniform fixed-reps ensemble needs."""
+    svc = _svc(tmp_path)
+    # λ=2 is a low-variance cell (stops at min_reps); λ=20 is noisy enough
+    # that a 1% CI needs many rounds — the heterogeneity adaptive exploits.
+    r = svc.query(TOPO, W_list=[4000], lam_list=[2, 20], ci=0.01,
+                  ci_relative=True, batch_reps=8, max_reps=512, seed0=11)
+    cells = r.cells
+    assert (cells.half_width <= 0.01 * np.abs(cells.mean)).all()
+    assert (cells.n >= 8).all()
+    # fixed-reps baseline: every cell pays the worst cell's requirement
+    n_fixed = max(
+        fixed_reps_for_width(float(cells.std[c]),
+                             0.01 * float(cells.mean[c]))
+        for c in range(len(cells))) * len(cells)
+    assert int(cells.n.sum()) < n_fixed
+    # cached replay returns identical statistics
+    r2 = svc.query(TOPO, W_list=[4000], lam_list=[2, 20], ci=0.01,
+                   ci_relative=True, batch_reps=8, max_reps=512, seed0=11)
+    assert r2.from_cache
+    assert np.array_equal(r2.grid.makespan, r.grid.makespan)
+    assert r2.cells.n.sum() == cells.n.sum()
+
+
+def test_broker_aliases_identical_inflight_queries(tmp_path):
+    svc = _svc(tmp_path)
+    q = _small_query(svc)
+    r1, r2 = svc.query_many([q, q])
+    assert svc.n_dispatches == 1
+    assert not r1.from_cache and r2.from_cache
+    assert np.array_equal(r1.grid.makespan, r2.grid.makespan)
+
+
+def test_broker_pads_to_pow2(tmp_path):
+    svc = _svc(tmp_path)
+    svc.query(TOPO, W_list=[4000], lam_list=[2, 5, 9], reps=2, seed0=3)
+    log = svc.broker.dispatch_log[0]
+    assert log["n_rows"] == 6 and log["n_padded"] == 8
+
+
+def test_summarize_excludes_overflow_rows():
+    import dataclasses
+    g = run_grid(TOPO, W_list=[4000], lam_list=[2], reps=4)
+    ovf = np.array(g.overflow)
+    ovf[1] = True                               # forge one bad rep
+    g = dataclasses.replace(g, overflow=ovf)
+    t = summarize_cells(g)
+    assert int(t.n[0]) == 3 and int(t.n_overflow[0]) == 1
+    ok = ~g.overflow
+    assert t.mean[0] == pytest.approx(g.makespan[ok].mean())
+
+
+# ---------------------------------------------------------------------------
+# sweep layer: chunked resumable execution
+# ---------------------------------------------------------------------------
+
+def test_chunked_run_grid_matches_unchunked():
+    whole = run_grid(TOPO, W_list=[3000], lam_list=[2, 5], reps=3)
+    seen = []
+    chunked = run_grid(TOPO, W_list=[3000], lam_list=[2, 5], reps=3,
+                       chunk_size=4, on_chunk=lambda i, g: seen.append(i))
+    assert seen == [0, 1]                       # 6 rows -> chunks of 4, 2
+    assert np.array_equal(chunked.makespan, whole.makespan)
+    assert np.array_equal(chunked.seed, whole.seed)
+    for k in whole.extras:
+        assert np.array_equal(chunked.extras[k], whole.extras[k]), k
+    # resume from chunk 1 recomputes only the tail, bit-identically
+    tail = run_grid(TOPO, W_list=[3000], lam_list=[2, 5], reps=3,
+                    chunk_size=4, start_chunk=1)
+    assert len(tail) == 2
+    assert np.array_equal(tail.makespan, whole.makespan[4:])
+
+
+def test_concat_grids_rejects_mixed_p():
+    a = run_grid(one_cluster(4, 2), W_list=[1000], reps=2)
+    b = run_grid(one_cluster(8, 2), W_list=[1000], reps=2)
+    with pytest.raises(ValueError):
+        concat_grids([a, b])
+
+
+def test_run_grid_accepts_lam_pairs():
+    """(lam_local, lam_remote) grid entries work through the core sweep API
+    (not just the service facade), incl. the default-max_events path."""
+    topo = two_clusters(4, 8)
+    g = run_grid(topo, W_list=[2000], lam_list=[(1, 8)], reps=2)
+    assert np.array_equal(g.extras["lam_local"], [1, 1])
+    assert np.array_equal(g.lam, [8, 8])
+    assert not g.overflow.any()
+
+
+def test_grid_rows_streams_do_not_collide():
+    r0 = grid_rows([1000], [2], 8, seed0=1, stream=0)
+    r1 = grid_rows([1000], [2], 8, seed0=1, stream=1)
+    assert not np.intersect1d(r0.seed, r1.seed).size
