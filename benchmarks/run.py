@@ -13,6 +13,8 @@ artifacts/bench/). Figures:
   service_throughput     sweep service: cold vs warm queries/sec, broker
                          coalescing batch sizes, adaptive-vs-fixed-reps
                          replication savings at equal CI width
+  paired_comparison      paired CRN A/B queries vs independent arms:
+                         reps-to-significance for a small policy gap
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -269,6 +271,7 @@ def service_throughput(reps: int):
       a CI target vs what a fixed-reps sweep needs for the same width
       (n_fixed = ceil((z·sigma/h)²) per cell, from the measured variance).
     """
+    import shutil
     import tempfile
     from repro.core import one_cluster
     from repro.service import SimulationService
@@ -278,7 +281,8 @@ def service_throughput(reps: int):
     lams = (2, 10, 30, 50)
     rows = []
 
-    svc = SimulationService(root=tempfile.mkdtemp(prefix="bench_store_"))
+    tmp = tempfile.mkdtemp(prefix="bench_store_")
+    svc = SimulationService(root=tmp)
     # Concurrent queries over different θ thresholds share one task-model
     # bucket (θ is a traced scenario field), so the broker coalesces them
     # into a single device program — the planner's access pattern.
@@ -331,6 +335,69 @@ def service_throughput(reps: int):
          f"{r['cold_qps']:.1f} q/s); {r['mean_queries_per_dispatch']} "
          f"queries/dispatch; adaptive {n_adapt} reps vs fixed {n_fixed} "
          f"for ±{tgt_rel:.0%} CI (x{r['rep_savings']} fewer)")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def paired_comparison(reps: int):
+    """Paired (common-random-numbers) vs independent A/B policy queries:
+    replications needed for a *significant* verdict on a small policy gap.
+
+    The paired estimator replicates until the CI on the per-seed makespan
+    difference excludes zero; the independent-arms baseline needs
+    n >= (z·sqrt(var_A + var_B)/|delta|)² pairs for the same verdict
+    (computed from the measured per-arm variances). CRN cancels the shared
+    Monte-Carlo noise, so paired reaches significance with far fewer reps —
+    which is what makes small policy gaps (e.g. localized stealing, MWT)
+    resolvable inside a planning budget.
+    """
+    import shutil
+    import tempfile
+    from repro.core import one_cluster
+    from repro.service import PairedPolicy, SimulationService
+    from repro.service.estimator import z_value
+
+    p, W, lam = 32, 10**6, 262
+    tmp = tempfile.mkdtemp(prefix="bench_paired_")
+    svc = SimulationService(root=tmp)
+    topo = one_cluster(p, lam)
+    rows = []
+    t0 = time.time()
+    # Two A/B gaps of different sizes: SWT vs MWT (small), θ_comm 0 vs 2
+    # (latency-dependent).
+    arms = {
+        "swt_vs_mwt": (dict(mwt=False), dict(mwt=True)),
+        "theta0_vs_theta2": (dict(theta=((0, 0),)), dict(theta=((0, 2),))),
+    }
+    for name, (kw_a, kw_b) in arms.items():
+        base = dict(W_list=[W], lam_list=[lam], reps=8, seed0=31)
+        qa = svc.make_query(topo, **{**base, **kw_a})
+        qb = svc.make_query(topo, **{**base, **kw_b})
+        res = svc.query_pair(qa, qb, policy=PairedPolicy(
+            batch_reps=8, min_reps=8, max_reps=64 * max(reps, 16)))
+        pc = res.paired
+        n_paired = int(pc.n[0])
+        delta = float(pc.delta_mean[0])
+        var_sum = float(pc.var_a[0] + pc.var_b[0])
+        z = z_value(pc.confidence)
+        n_indep = int(np.ceil(z * z * var_sum / max(delta * delta, 1e-12))) \
+            if pc.significant[0] else np.inf
+        rows.append(dict(
+            pair=name, p=p, W=W, lam=lam,
+            delta=round(delta, 1),
+            delta_hw=round(float(pc.delta_half_width[0]), 1),
+            indep_hw_same_n=round(float(pc.independent_half_width()[0]), 1),
+            significant=bool(pc.significant[0]),
+            n_paired=n_paired, n_indep_equiv=n_indep,
+            savings=round(n_indep / max(n_paired, 1), 1)
+            if np.isfinite(n_indep) else ""))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    _write_csv("paired_comparison", rows)
+    sig = [r for r in rows if r["significant"] and r["savings"] != ""]
+    med = float(np.median([r["savings"] for r in sig])) if sig else 0.0
+    _row("paired_comparison", us,
+         f"{len(sig)}/{len(rows)} gaps significant; paired needs "
+         f"x{med:.1f} fewer reps than independent arms")
+    shutil.rmtree(tmp, ignore_errors=True)
 
 
 def roofline(_reps: int):
@@ -393,6 +460,7 @@ def main():
         "model_throughput": lambda: model_throughput(max(reps, 32)),
         "sched_planner": lambda: sched_planner(reps),
         "service_throughput": lambda: service_throughput(reps),
+        "paired_comparison": lambda: paired_comparison(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

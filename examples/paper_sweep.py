@@ -6,8 +6,13 @@ Fig 12/14: MWT vs SWT: startup-phase speedup, flat overall gain.
 
 Fig 10 runs through the sweep *service* (DESIGN.md §5): each table cell is
 adaptively replicated until E[Cmax] has a 1% confidence interval, instead of
-a fixed rep count, and the printed table carries the CI columns. Rerunning
-this script answers every cell from the content-addressed store.
+a fixed rep count, and the printed table carries the CI columns plus the
+paper's boxplot-style distribution columns — median/p10/p90 from the
+*streaming* P² estimator (no stored ensemble needed). The MWT-vs-SWT
+comparison (Fig 12/14) is a paired common-random-numbers A/B query: both
+arms simulate the same seeds, so the speedup carries a CI on the per-seed
+difference. Rerunning this script answers every cell from the
+content-addressed store.
 
 Full-scale parameters (1000 reps, W to 1e8) run the same code; see
 benchmarks/ for the CSV versions used in EXPERIMENTS.md.
@@ -18,12 +23,13 @@ import numpy as np
 
 from repro.core import analysis, engine as eng, make_model, one_cluster
 from repro.core import divisible as dv
-from repro.service import SimulationService
+from repro.service import PairedPolicy, SimulationService
 
 
 def overhead_and_fit(service=None, rel_hw=0.01):
     print("=== Fig 10: overhead ratio + fitted constant "
-          f"(adaptive, ±{rel_hw:.0%} CI on E[Cmax]) ===")
+          f"(adaptive, ±{rel_hw:.0%} CI on E[Cmax]; "
+          "p10/med/p90 via streaming P²) ===")
     svc = service or SimulationService()
     ratios_all, fits_all, total_reps = [], [], 0
     for p in (32, 64):
@@ -33,6 +39,9 @@ def overhead_and_fit(service=None, rel_hw=0.01):
                         batch_reps=8, max_reps=96, seed0=1)
         cells = res.cells
         total_reps += int(cells.n.sum())
+        p10 = cells.quantile(0.1)
+        p50 = cells.quantile(0.5)
+        p90 = cells.quantile(0.9)
         for c in range(len(cells)):
             W, lam = int(cells.W[c]), int(cells.lam_remote[c])
             mean, hw, n = cells.mean[c], cells.half_width[c], int(cells.n[c])
@@ -40,13 +49,12 @@ def overhead_and_fit(service=None, rel_hw=0.01):
             r = analysis.overhead_ratio(mean, W, p, lam)
             r_hw = r - analysis.overhead_ratio(mean + hw, W, p, lam)
             fit = analysis.fitted_constant(mean, W, p, lam)
-            fit_hw = analysis.fitted_constant(mean + hw, W, p, lam) - fit
             ratios_all.append(float(r))
             fits_all.append(float(fit))
             print(f"  p={p:3d} W=1e{int(np.log10(W))} lam={lam:3d}: "
                   f"Cmax={mean:12.1f} ±{hw:8.1f} (n={n:3d})  "
-                  f"ratio={r:5.2f}±{abs(r_hw):4.2f} "
-                  f"fit_c={fit:5.2f}±{fit_hw:4.2f}")
+                  f"p10/med/p90={p10[c]:10.0f}/{p50[c]:10.0f}/{p90[c]:10.0f}  "
+                  f"ratio={r:5.2f}±{abs(r_hw):4.2f} fit_c={fit:5.2f}")
     print(f"  => median overhead ratio {np.median(ratios_all):.2f} "
           f"(paper: 4-5.5); fitted constant {np.median(fits_all):.2f} "
           f"(paper: 3.8); {total_reps} adaptive replications")
@@ -73,24 +81,32 @@ def acceptable_latency(reps=16):
               f"(W/p)/lam*={(W / p) / max(lam_exp, 1):6.0f} (paper: ~470)")
 
 
-def mwt_vs_swt(reps=24):
-    print("\n=== Fig 12/14: MWT vs SWT ===")
+def mwt_vs_swt(service=None, reps=24):
+    """Fig 12/14 as a paired CRN A/B query: arm A = SWT, arm B = MWT, both
+    simulating the *same* seed streams, replicated until the CI on the
+    per-seed makespan difference resolves the verdict (or the budget ends).
+    """
+    print("\n=== Fig 12/14: MWT vs SWT (paired CRN A/B) ===")
+    svc = service or SimulationService()
     W, lam = 10**6, 262
     for p in (16, 32, 64):
         topo = one_cluster(p, lam)
-        out = {}
-        for mwt in (False, True):
-            model = make_model(
-                "divisible", topology=topo, mwt=mwt,
-                max_events=dv.default_max_events(W, p, lam))
-            scn = eng.batch_scenarios(W, np.arange(reps, dtype=np.uint32) + 5,
-                                      lam=lam)
-            res = eng.simulate_batch(model, scn)
-            out[mwt] = (np.asarray(res.makespan), np.asarray(res.startup_end))
-        ms_gain = np.median(out[False][0]) / np.median(out[True][0])
-        su_gain = np.median(out[False][1]) / np.median(out[True][1])
+        q_swt = svc.make_query(topo, W_list=[W], lam_list=[lam], reps=reps,
+                               seed0=5, mwt=False)
+        q_mwt = svc.make_query(topo, W_list=[W], lam_list=[lam], reps=reps,
+                               seed0=5, mwt=True)
+        res = svc.query_pair(q_swt, q_mwt, policy=PairedPolicy(
+            batch_reps=8, min_reps=8, max_reps=4 * reps))
+        pc = res.paired
+        ms_gain = float(pc.mean_a[0] / pc.mean_b[0])
+        su_gain = float(np.mean(res.grid_a.startup_end)
+                        / np.mean(res.grid_b.startup_end))
+        verdict = ("MWT faster" if pc.delta_mean[0] > 0 else "SWT faster") \
+            if pc.significant[0] else "no significant gap"
         print(f"  p={p:3d}: startup speedup x{su_gain:4.2f} "
-              f"overall speedup x{ms_gain:4.2f} "
+              f"overall speedup x{ms_gain:4.2f}; "
+              f"dCmax={pc.delta_mean[0]:8.1f} ±{pc.delta_half_width[0]:7.1f} "
+              f"(n={int(pc.n[0])} pairs) -> {verdict} "
               f"(paper: startup up to 2x+, overall ~flat)")
 
 
@@ -121,6 +137,6 @@ if __name__ == "__main__":
     svc = SimulationService()
     overhead_and_fit(svc)
     acceptable_latency()
-    mwt_vs_swt()
+    mwt_vs_swt(svc)
     all_task_models()
     print(f"\nservice: {svc.stats()}")

@@ -339,6 +339,7 @@ def run_grid(
     chunk_size: Optional[int] = None,
     on_chunk: Optional[Callable[[int, GridResult], None]] = None,
     start_chunk: int = 0,
+    chunk_lookup: Optional[Callable[[int], Optional[GridResult]]] = None,
     **model_kw,
 ) -> GridResult:
     """Simulate the full (W × λ × θ × reps) grid on topology ``topo``.
@@ -356,8 +357,20 @@ def run_grid(
     the sweep *resumable*: chunk boundaries are deterministic functions of
     the grid spec, each finished chunk is handed to ``on_chunk(idx, grid)``
     for persistence, and a rerun with ``start_chunk=k`` recomputes only
-    chunks ``>= k`` (stitch with :func:`concat_grids`).
+    chunks ``>= k`` (stitch with :func:`concat_grids`). ``chunk_lookup``
+    generalizes that to non-contiguous recovery: it is asked for each chunk
+    first, and any non-None :class:`GridResult` it returns (e.g. from the
+    content-addressed store — see ``SimulationService.sweep``) is used
+    verbatim instead of recomputing; ``on_chunk`` only fires for chunks that
+    were actually computed. ``start_chunk``/``chunk_lookup`` require
+    ``chunk_size`` — without it the whole grid is one chunk 0 and a resume
+    request would silently recompute and re-report everything.
     """
+    if chunk_size is None and (start_chunk > 0 or chunk_lookup is not None):
+        raise ValueError(
+            "start_chunk/chunk_lookup require chunk_size=: without it the "
+            "grid is a single chunk 0 and the resume request would be "
+            "silently ignored")
     model = resolve_model(topo, task_model, W_list=W_list, lam_list=lam_list,
                           mwt=mwt, max_events=max_events, **model_kw)
     rows = grid_rows(W_list, lam_list, reps, theta, seed0=seed0)
@@ -372,6 +385,15 @@ def run_grid(
 
     parts = []
     for ci, rws in chunks:
+        g = chunk_lookup(ci) if chunk_lookup is not None else None
+        if g is not None:
+            if len(g) != len(rws) or not np.array_equal(
+                    np.asarray(g.seed), np.asarray(rws.seed)):
+                raise ValueError(
+                    f"chunk_lookup returned a grid for chunk {ci} that does "
+                    "not match the chunk's rows (stale store entry?)")
+            parts.append(g)
+            continue
         g = run_rows(model, rws, mesh=mesh, shard_axes=shard_axes)
         if on_chunk is not None:
             on_chunk(ci, g)

@@ -13,6 +13,14 @@ one batched dispatch (remote_prob is part of the broker's bucket key, so
 rp variants dispatch separately), and a replanned fleet (same topology,
 same workload) is answered entirely from the content-addressed store —
 zero simulator dispatches.
+
+The *pick itself* is a paired common-random-numbers query: after the sweep
+ranks candidates by median makespan, the winner meets the baseline policy
+(uniform stealing, no thresholds, SWT) in a head-to-head rematch on shared
+seed streams, replicated until the CI on the per-seed makespan difference
+excludes zero (or the rep budget runs out). The decision therefore carries
+a *statistically defensible* verdict — gap, CI and significance — instead
+of a point ranking that low-rep noise can flip.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import numpy as np
 from repro.core import topology as topo_mod
 from repro.core.topology import Topology, tpu_fleet
 from repro.service.api import SimulationService
+from repro.service.estimator import PairedPolicy
 
 #: Module-default service so repeated plans share one store/LRU.
 _DEFAULT_SERVICE: Optional[SimulationService] = None
@@ -48,6 +57,11 @@ class PlannerDecision:
     baseline_makespan: float        # uniform/no-threshold reference
     table: Tuple = ()               # full sweep results (for logging)
     n_dispatches: int = 0           # simulator programs this plan cost
+    # Paired CRN verdict of the winner vs the baseline policy:
+    delta_mean: float = 0.0         # E[Cmax_winner - Cmax_baseline]
+    delta_half_width: float = float("inf")
+    significant: bool = False       # CI on the difference excludes zero
+    n_paired_reps: int = 0          # CRN seed pairs the verdict cost
 
     @property
     def strategy_name(self) -> str:
@@ -101,10 +115,28 @@ def plan(
     baseline = next(r[5] for r in rows
                     if r[0] == "uniform" and not r[1] and r[2] == 0 and r[3] == 0)
     med, strat, rp, ts, tc, mwt = best
+
+    # Head-to-head rematch under common random numbers: winner vs baseline,
+    # one cell (the winning θ), replicated until the difference CI resolves.
+    winner_q = svc.make_query(
+        topo.with_strategy(strat), W_list=[W], lam_list=[lam_cell],
+        theta=((ts, tc),), seed0=seed0 + 1, remote_prob=rp, mwt=mwt)
+    base_q = svc.make_query(
+        topo.with_strategy(topo_mod.UNIFORM), W_list=[W],
+        lam_list=[lam_cell], theta=((0, 0),), seed0=seed0 + 1,
+        remote_prob=0.25, mwt=False)
+    pres = svc.query_pair(winner_q, base_q, policy=PairedPolicy(
+        batch_reps=max(reps // 2, 4), min_reps=max(reps // 2, 4),
+        max_reps=max(16 * reps, 64)))
+    pc = pres.paired
     return PlannerDecision(
         strategy=strat, remote_prob=rp, theta_static=ts, theta_comm=tc,
         mwt=mwt, expected_makespan=med, baseline_makespan=baseline,
-        table=tuple(rows), n_dispatches=svc.n_dispatches - before)
+        table=tuple(rows), n_dispatches=svc.n_dispatches - before,
+        delta_mean=float(pc.delta_mean[0]),
+        delta_half_width=float(pc.delta_half_width[0]),
+        significant=bool(pc.significant[0]),
+        n_paired_reps=int(pc.n[0]))
 
 
 def plan_for_mesh(n_pods: int, chips_per_pod: int, *, ici_delay: int = 1,

@@ -2,15 +2,22 @@
 Monte-Carlo estimation on top of the unified batched core (DESIGN.md §5).
 
 The simulator engine answers questions; this package serves them: repeated
-questions are cache hits forever (``store``), concurrent questions coalesce
-into shared device programs (``broker``), and every estimate carries a
-confidence interval with replication driven by a precision target instead
-of a fixed rep count (``estimator``). ``api.SimulationService`` is the
-facade callers use.
+questions are cache hits forever (``store``, with size-based GC and a
+manifest for fleet-shared tiers), concurrent questions coalesce into shared
+device programs (``broker``), and every estimate carries a statistical
+guarantee — mean CIs, streaming P² quantile CIs, or paired
+common-random-numbers A/B verdicts — with replication driven by a precision
+target instead of a fixed rep count (``estimator``). ``api.SimulationService``
+is the facade callers use.
 """
 from repro.service.api import SimulationService  # noqa: F401
-from repro.service.broker import QueryBroker, QueryResult, SimQuery  # noqa: F401
-from repro.service.estimator import (  # noqa: F401
-    AdaptivePolicy, CellTable, Welford, summarize_cells, z_value,
+from repro.service.broker import (  # noqa: F401
+    PairedQuery, PairedResult, QueryBroker, QueryResult, SimQuery,
 )
-from repro.service.store import ResultStore, query_key  # noqa: F401
+from repro.service.estimator import (  # noqa: F401
+    AdaptivePolicy, CellTable, P2Quantiles, PairedCells, PairedPolicy,
+    QuantilePolicy, Welford, paired_summary, summarize_cells, z_value,
+)
+from repro.service.store import (  # noqa: F401
+    ResultStore, chunk_key, model_digest, query_key,
+)

@@ -15,13 +15,17 @@ adaptive estimator (replication stops when the requested precision is met).
 from __future__ import annotations
 
 import os
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core import engine as eng
-from repro.core.sweep import lam_pair, resolve_model
+from repro.core.sweep import (GridResult, canonical_grid, lam_pair,
+                              resolve_model, run_grid)
 from repro.core.topology import Topology
-from repro.service.broker import QueryBroker, QueryResult, SimQuery
-from repro.service.estimator import AdaptivePolicy
+from repro.service.broker import (PairedQuery, PairedResult, QueryBroker,
+                                  QueryResult, SimQuery)
+from repro.service.estimator import (AdaptivePolicy, PairedPolicy,
+                                     QuantilePolicy)
+from repro.service import store as store_mod
 from repro.service.store import ResultStore
 
 
@@ -63,13 +67,15 @@ class SimulationService:
     ) -> SimQuery:
         """Build a SimQuery. ``ci`` switches on adaptive estimation: either a
         target CI half-width (absolute time units, or a fraction of the mean
-        when ``ci_relative``) or a full :class:`AdaptivePolicy`."""
+        when ``ci_relative``), or a full :class:`AdaptivePolicy` /
+        :class:`QuantilePolicy` (the latter replicates until the streaming
+        P² quantile CIs meet their target)."""
         lam_flat = [l for entry in lam_list for l in lam_pair(entry)]
         model = resolve_model(topology, task_model, W_list=W_list,
                               lam_list=lam_flat, mwt=mwt,
                               max_events=max_events, pow2_max_events=True,
                               **model_kw)
-        if isinstance(ci, AdaptivePolicy):
+        if isinstance(ci, (AdaptivePolicy, QuantilePolicy)):
             adaptive = ci
         elif ci is not None:
             adaptive = AdaptivePolicy(
@@ -94,11 +100,73 @@ class SimulationService:
         """Ask one question (cache -> coalesce -> simulate -> estimate)."""
         return self.query_many([self.make_query(topology, **kw)])[0]
 
-    def query_many(self, queries: Sequence[SimQuery]) -> List[QueryResult]:
+    def query_many(
+        self, queries: Sequence[Union[SimQuery, PairedQuery]]
+    ) -> List[Union[QueryResult, PairedResult]]:
         """Answer a batch of concurrent questions in one coalesced flush."""
         for q in queries:
             self.broker.submit(q)
         return self.broker.flush()
+
+    def query_pair(self, query_a: SimQuery, query_b: SimQuery,
+                   policy: Optional[PairedPolicy] = None) -> PairedResult:
+        """A/B policy comparison under common random numbers: both arms run
+        identical scenario rows (same seeds), and the answer carries a CI on
+        the per-seed makespan difference — "is policy A faster, and by how
+        much". With a :class:`PairedPolicy`, replication continues until the
+        difference CI excludes zero (or meets the width target); build the
+        arms with :meth:`make_query` (no ``ci``)."""
+        return self.query_many(
+            [PairedQuery(a=query_a, b=query_b, policy=policy)])[0]
+
+    # -- store-backed resumable sweeps --------------------------------------
+
+    def sweep(
+        self,
+        topology: Topology,
+        *,
+        task_model="divisible",
+        W_list: Sequence[int] = (0,),
+        lam_list: Sequence = (1,),
+        theta: Sequence = ((0, 0),),
+        reps: int = 1,
+        seed0: int = 1,
+        chunk_size: int = 1024,
+        mwt: bool = False,
+        max_events: Optional[int] = None,
+        on_chunk: Optional[Callable[[int, GridResult], None]] = None,
+        **model_kw,
+    ) -> GridResult:
+        """Store-backed chunked ``run_grid``: every chunk is keyed in the
+        content-addressed store (``store.chunk_key``), persisted the moment
+        it finishes, and looked up before being recomputed — so a sweep
+        killed mid-run (any process, any host sharing the store root)
+        resumes recomputing only the unfinished chunks, with no resume
+        bookkeeping on the caller."""
+        lam_flat = [l for entry in lam_list for l in lam_pair(entry)]
+        model = resolve_model(topology, task_model, W_list=W_list,
+                              lam_list=lam_flat, mwt=mwt,
+                              max_events=max_events, **model_kw)
+        grid = canonical_grid(W_list, lam_list, reps, theta=theta,
+                              seed0=seed0)
+        canon = store_mod.canonical_model(model)
+
+        def ckey(ci: int) -> str:
+            return store_mod.chunk_key(model, grid, chunk_size, ci)
+
+        def persist(ci: int, g: GridResult):
+            self.store.put(ckey(ci), g,
+                           meta={"grid": grid, "model": canon,
+                                 "chunk": {"size": int(chunk_size),
+                                           "idx": int(ci)}})
+            if on_chunk is not None:
+                on_chunk(ci, g)
+
+        return run_grid(topology, W_list=W_list, lam_list=lam_list,
+                        reps=reps, theta=theta, seed0=seed0,
+                        task_model=model, chunk_size=chunk_size,
+                        on_chunk=persist,
+                        chunk_lookup=lambda ci: self.store.get(ckey(ci)))
 
     # -- introspection ------------------------------------------------------
 

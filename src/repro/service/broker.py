@@ -6,10 +6,12 @@ wastes the batched core. The broker instead:
 
 1. answers every query it can from the content-addressed store;
 2. groups the remaining queries into *buckets* of identical static
-   configuration — the same ``TaskModel`` (topology, strategy, MWT, caps)
-   and the same ``remote_prob`` scalar — because only static config forces
-   a separate compiled program; everything else (W, λ, θ, seed) is a
-   traced per-row scenario field;
+   configuration — the same canonical task-model config (topology, strategy,
+   MWT, caps) and the same ``remote_prob`` scalar — because only static
+   config forces a separate compiled program; everything else (W, λ, θ,
+   seed) is a traced per-row scenario field. Buckets are keyed by the
+   *canonical model form*, not object identity, so structurally identical
+   models built by different callers coalesce too;
 3. concatenates every bucket's pending rows into ONE batched sweep, padded
    to the next power of two (padding rows are W=1 scenarios, which
    terminate immediately; pow-2 padding bounds the number of distinct batch
@@ -19,12 +21,18 @@ wastes the batched core. The broker instead:
 
 Adaptive queries participate in the same rounds: round r of every pending
 query lands in the same bucket dispatch, so N concurrent adaptive queries
-still cost one device program per (bucket, round).
+still cost one device program per (bucket, round). Paired A/B queries
+(:class:`PairedQuery`) submit both arms' rows — the *same* rows, so the
+arms share seeds (common random numbers) — into their arms' buckets each
+round, and replicate until the CI on the per-seed makespan difference
+answers "is policy A faster" (see ``estimator.PairedPolicy``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -33,10 +41,15 @@ from repro.core.sweep import (GridResult, GridRows, canonical_grid,
                               concat_grids, grid_rows, run_rows)
 from repro.core.topology import remote_prob_u32
 from repro.service import store as store_mod
-from repro.service.estimator import (AdaptivePolicy, CellTable, Welford,
-                                     cell_index, summarize_cells,
+from repro.service.estimator import (AdaptivePolicy, CellTable, P2Quantiles,
+                                     PairedCells, PairedPolicy,
+                                     QuantilePolicy, Welford, cell_index,
+                                     paired_summary, summarize_cells,
                                      unique_cells)
 from repro.service.store import ResultStore
+
+#: Stopping rules a SimQuery may carry (None = fixed ``reps`` ensemble).
+StoppingPolicy = Union[AdaptivePolicy, QuantilePolicy]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,8 +57,9 @@ class SimQuery:
     """One sweep question: a task model + a scenario grid + a stopping rule.
 
     ``reps`` is the fixed ensemble size when ``adaptive`` is None; with an
-    :class:`AdaptivePolicy` it is ignored and replication is driven by the
-    CI target instead.
+    :class:`AdaptivePolicy` (CI target on E[Cmax]) or a
+    :class:`QuantilePolicy` (CI target on streaming quantiles) it is ignored
+    and replication is driven by the statistical target instead.
     """
     model: eng.TaskModel
     W_list: Tuple[int, ...] = (0,)
@@ -54,7 +68,7 @@ class SimQuery:
     reps: int = 16
     seed0: int = 1
     remote_prob: float = 0.25
-    adaptive: Optional[AdaptivePolicy] = None
+    adaptive: Optional[StoppingPolicy] = None
 
     def grid_dict(self) -> dict:
         reps = self.adaptive.batch_reps if self.adaptive else self.reps
@@ -70,6 +84,72 @@ class SimQuery:
     @property
     def n_cells(self) -> int:
         return len(self.W_list) * len(self.lam_list) * len(self.theta)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairedQuery:
+    """A/B policy comparison under common random numbers: both arms run the
+    *same* scenario rows (same cells, same seeds), so the per-seed makespan
+    difference cancels the shared Monte-Carlo noise and small policy gaps
+    become resolvable at low rep counts.
+
+    The arms are two :class:`SimQuery` over the same grid (models and
+    ``remote_prob`` may differ — that is the policy under test); their own
+    ``adaptive`` must be None, because replication is driven by the pair's
+    :class:`PairedPolicy` (or one fixed round of ``a.reps`` when None).
+    """
+    a: SimQuery
+    b: SimQuery
+    policy: Optional[PairedPolicy] = None
+
+    def __post_init__(self):
+        for f in ("W_list", "lam_list", "reps", "seed0"):
+            if getattr(self.a, f) != getattr(self.b, f):
+                raise ValueError(f"paired arms disagree on {f}; CRN needs "
+                                 "identical workload rows")
+        # θ is part of the *policy*, so the arms' thresholds may differ —
+        # but cell k of arm A pairs with cell k of arm B, so the θ axes
+        # must have equal length.
+        if len(self.a.theta) != len(self.b.theta):
+            raise ValueError("paired arms need θ axes of equal length "
+                             f"({len(self.a.theta)} vs {len(self.b.theta)})")
+        if self.a.adaptive is not None or self.b.adaptive is not None:
+            raise ValueError("paired arms must not carry their own adaptive "
+                             "policy; use PairedQuery(policy=...)")
+
+    def _arm_grid(self, arm: SimQuery) -> dict:
+        reps = self.policy.batch_reps if self.policy else self.a.reps
+        return canonical_grid(arm.W_list, arm.lam_list, reps,
+                              theta=arm.theta, seed0=arm.seed0,
+                              remote_prob=arm.remote_prob)
+
+    def arm_keys(self) -> Tuple[str, str]:
+        """Store keys of the two arm grids. With no policy the arms are
+        plain fixed-reps sweeps and share keys (and cached answers) with
+        solo queries; with a PairedPolicy the replication pattern depends on
+        the *pair* (which cells' deltas converged), so the key carries the
+        policy and the other arm's model digest."""
+        if self.policy is None:
+            return self.a.key(), self.b.key()
+        da = store_mod.model_digest(self.a.model)
+        db = store_mod.model_digest(self.b.model)
+        extra_a = {"paired": self.policy.canonical(), "other_model": db,
+                   "other_rp_u32": remote_prob_u32(float(self.b.remote_prob))}
+        extra_b = {"paired": self.policy.canonical(), "other_model": da,
+                   "other_rp_u32": remote_prob_u32(float(self.a.remote_prob))}
+        return (store_mod.query_key(self.a.model, self._arm_grid(self.a),
+                                    extra=extra_a),
+                store_mod.query_key(self.b.model, self._arm_grid(self.b),
+                                    extra=extra_b))
+
+    def key(self) -> str:
+        ka, kb = self.arm_keys()
+        pol = json.dumps(self.policy.canonical()) if self.policy else "fixed"
+        return hashlib.sha256(f"paired:{ka}:{kb}:{pol}".encode()).hexdigest()
+
+    @property
+    def n_cells(self) -> int:
+        return self.a.n_cells
 
 
 @dataclasses.dataclass
@@ -93,15 +173,39 @@ class QueryResult:
                                                     >= policy.min_reps)
 
 
+@dataclasses.dataclass
+class PairedResult:
+    """Answer to a PairedQuery: both arms' full ensembles and summaries plus
+    the per-cell paired-difference statistics (CI on E[Cmax_A − Cmax_B],
+    significance verdict, independent-arms baseline width)."""
+    key: str
+    grid_a: GridResult
+    grid_b: GridResult
+    cells_a: CellTable
+    cells_b: CellTable
+    paired: PairedCells
+    from_cache: bool
+    n_rounds: int
+
+    @property
+    def total_reps(self) -> int:
+        return len(self.grid_a) + len(self.grid_b)
+
+
 class _Pending:
     """Per-query round state machine inside one flush."""
 
     def __init__(self, query: SimQuery, confidence: float):
         self.query = query
         self.confidence = confidence
+        self.canon = store_mod.canonical_model(query.model)
         self.parts: List[GridResult] = []
         self.round = 0
         self.welford = Welford.zeros(query.n_cells)
+        self.p2 = None
+        if isinstance(query.adaptive, QuantilePolicy):
+            self.p2 = P2Quantiles.zeros(query.n_cells,
+                                        query.adaptive.quantiles)
         self._active_cells: Optional[np.ndarray] = None  # adaptive round mask
         # Rounds are capped so a pathological cell that only ever overflows
         # (contributing no valid samples, hence never converging) cannot
@@ -110,7 +214,7 @@ class _Pending:
             -(-query.adaptive.max_reps // query.adaptive.batch_reps)
             if query.adaptive else 1)
 
-    def next_rows(self) -> Optional[GridRows]:
+    def _next_rows(self) -> Optional[GridRows]:
         """Rows this query wants simulated next, or None when finished."""
         q = self.query
         if self.round >= self._max_rounds:
@@ -118,7 +222,8 @@ class _Pending:
         if q.adaptive is None:
             return grid_rows(q.W_list, q.lam_list, q.reps, q.theta,
                              seed0=q.seed0)
-        pending = q.adaptive.unconverged(self.welford)
+        state = self.p2 if self.p2 is not None else self.welford
+        pending = q.adaptive.unconverged(state)
         if not pending.any():
             self._active_cells = None
             return None
@@ -132,22 +237,145 @@ class _Pending:
         self._active_cells = inv[keep]
         return GridRows(*(np.asarray(a)[keep] for a in full))
 
-    def feed(self, grid: GridResult):
+    def wants(self) -> List[Tuple[str, eng.TaskModel, dict, float, GridRows]]:
+        rows = self._next_rows()
+        if rows is None:
+            return []
+        return [("solo", self.query.model, self.canon,
+                 self.query.remote_prob, rows)]
+
+    def feed_part(self, tag: str, grid: GridResult):
         self.parts.append(grid)
         ok = ~np.asarray(grid.overflow, bool)
         if self.query.adaptive is None:
             _, inv = cell_index(grid)
         else:
             inv = self._active_cells
-        self.welford.update(np.asarray(inv)[ok],
-                            np.asarray(grid.makespan)[ok])
+        idx = np.asarray(inv)[ok]
+        vals = np.asarray(grid.makespan)[ok]
+        self.welford.update(idx, vals)
+        if self.p2 is not None:
+            self.p2.update(idx, vals)
         self.round += 1
 
-    def result(self, key: str) -> QueryResult:
+    def result(self, key: str):
         grid = concat_grids(self.parts)
         return QueryResult(key=key, grid=grid,
                            cells=summarize_cells(grid, self.confidence),
                            from_cache=False, n_rounds=self.round)
+
+    def persist(self, store: ResultStore, key: str):
+        store.put(key, concat_grids(self.parts),
+                  meta={"grid": self.query.grid_dict(), "model": self.canon})
+
+
+class _PairedPending:
+    """Round state machine for a PairedQuery: both arms advance in lockstep
+    on identical rows (CRN), and convergence is judged on the per-seed
+    difference."""
+
+    def __init__(self, pq: PairedQuery, confidence: float):
+        self.pq = pq
+        self.confidence = confidence
+        self.canon_a = store_mod.canonical_model(pq.a.model)
+        self.canon_b = store_mod.canonical_model(pq.b.model)
+        self.parts_a: List[GridResult] = []
+        self.parts_b: List[GridResult] = []
+        self.round = 0
+        self.delta_w = Welford.zeros(pq.n_cells)
+        self._active_cells: Optional[np.ndarray] = None
+        self._fed: Dict[str, GridResult] = {}
+        self._max_rounds = (
+            -(-pq.policy.max_reps // pq.policy.batch_reps)
+            if pq.policy else 1)
+
+    def _arm_rows(self, reps: int, stream: int,
+                  keep: Optional[np.ndarray]) -> Tuple[GridRows, GridRows]:
+        """Both arms' rows for one round: identical W/λ/seed columns (the
+        common random numbers) with each arm's own θ thresholds — the grids
+        are (W × λ × θ × rep) cross products, so cell k of arm A pairs with
+        cell k of arm B positionally."""
+        a, b = self.pq.a, self.pq.b
+        full_a = grid_rows(a.W_list, a.lam_list, reps, a.theta,
+                           seed0=a.seed0, stream=stream)
+        full_b = grid_rows(b.W_list, b.lam_list, reps, b.theta,
+                           seed0=b.seed0, stream=stream)
+        if keep is None:
+            return full_a, full_b
+        return (GridRows(*(np.asarray(x)[keep] for x in full_a)),
+                GridRows(*(np.asarray(x)[keep] for x in full_b)))
+
+    def _next_keep(self) -> Optional[Tuple[int, Optional[np.ndarray]]]:
+        """(reps, row keep mask) of the next round, or None when finished."""
+        pq = self.pq
+        if self.round >= self._max_rounds:
+            return None
+        if pq.policy is None:
+            return pq.a.reps, None
+        pending = pq.policy.unconverged(self.delta_w)
+        if not pending.any():
+            self._active_cells = None
+            return None
+        full = grid_rows(pq.a.W_list, pq.a.lam_list, pq.policy.batch_reps,
+                         pq.a.theta, seed0=pq.a.seed0, stream=self.round)
+        _, inv = _rows_cell_index(full)
+        keep = pending[inv]
+        self._active_cells = inv[keep]
+        return pq.policy.batch_reps, keep
+
+    def wants(self) -> List[Tuple[str, eng.TaskModel, dict, float, GridRows]]:
+        nxt = self._next_keep()
+        if nxt is None:
+            return []
+        reps, keep = nxt
+        rows_a, rows_b = self._arm_rows(reps, self.round, keep)
+        return [("a", self.pq.a.model, self.canon_a,
+                 self.pq.a.remote_prob, rows_a),
+                ("b", self.pq.b.model, self.canon_b,
+                 self.pq.b.remote_prob, rows_b)]
+
+    def feed_part(self, tag: str, grid: GridResult):
+        self._fed[tag] = grid
+        if len(self._fed) < 2:
+            return
+        ga, gb = self._fed.pop("a"), self._fed.pop("b")
+        self.parts_a.append(ga)
+        self.parts_b.append(gb)
+        ok = ~(np.asarray(ga.overflow, bool) | np.asarray(gb.overflow, bool))
+        if self.pq.policy is None:
+            _, inv = cell_index(ga)
+        else:
+            inv = self._active_cells
+        delta = (np.asarray(ga.makespan, np.float64)
+                 - np.asarray(gb.makespan, np.float64))
+        self.delta_w.update(np.asarray(inv)[ok], delta[ok])
+        self.round += 1
+
+    def result(self, key: str) -> PairedResult:
+        ga, gb = concat_grids(self.parts_a), concat_grids(self.parts_b)
+        return _paired_result(key, ga, gb, self.confidence,
+                              from_cache=False, n_rounds=self.round)
+
+    def persist(self, store: ResultStore, key: str):
+        ka, kb = self.pq.arm_keys()
+        meta_pol = self.pq.policy.canonical() if self.pq.policy else None
+        store.put(ka, concat_grids(self.parts_a),
+                  meta={"grid": self.pq._arm_grid(self.pq.a),
+                        "model": self.canon_a, "paired": meta_pol})
+        store.put(kb, concat_grids(self.parts_b),
+                  meta={"grid": self.pq._arm_grid(self.pq.b),
+                        "model": self.canon_b, "paired": meta_pol})
+
+
+def _paired_result(key: str, ga: GridResult, gb: GridResult,
+                   confidence: float, from_cache: bool,
+                   n_rounds: int) -> PairedResult:
+    return PairedResult(
+        key=key, grid_a=ga, grid_b=gb,
+        cells_a=summarize_cells(ga, confidence),
+        cells_b=summarize_cells(gb, confidence),
+        paired=paired_summary(ga, gb, confidence),
+        from_cache=from_cache, n_rounds=n_rounds)
 
 
 def _rows_cell_index(rows: GridRows):
@@ -182,8 +410,20 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
 
 
+class _Bucket:
+    """One coalesced dispatch group: every member shares the same canonical
+    static config (and therefore the same compiled program)."""
+
+    def __init__(self, model: eng.TaskModel, canon: dict, rp: float):
+        self.model = model       # dispatch vehicle (first member's object)
+        self.canon = canon
+        self.rp = rp
+        self.members: List[Tuple[int, str, GridRows]] = []
+
+
 class QueryBroker:
-    """Accepts concurrent SimQuerys, coalesces, dispatches, fans back."""
+    """Accepts concurrent SimQuerys/PairedQuerys, coalesces, dispatches,
+    fans back."""
 
     def __init__(self, store: Optional[ResultStore] = None,
                  dispatch=None, pad_pow2: bool = True,
@@ -196,29 +436,52 @@ class QueryBroker:
             lambda model, rows, rp: run_rows(model, rows, remote_prob=rp,
                                              mesh=mesh,
                                              shard_axes=shard_axes))
-        self._queue: List[SimQuery] = []
+        self._queue: List[Union[SimQuery, PairedQuery]] = []
         # Telemetry for the service_throughput bench / coalescing tests.
         self.n_dispatches = 0
         self.n_cache_hits = 0
         self.n_queries = 0
         self.dispatch_log: List[dict] = []
 
-    def submit(self, query: SimQuery) -> int:
+    def submit(self, query: Union[SimQuery, PairedQuery]) -> int:
         """Enqueue; returns the query's position for the next flush()."""
         self._queue.append(query)
         return len(self._queue) - 1
 
-    def flush(self) -> List[QueryResult]:
+    def _paired_from_cache(self, pq: PairedQuery,
+                           key: str) -> Optional[PairedResult]:
+        ka, kb = pq.arm_keys()
+        ga = self.store.get(ka)
+        if ga is None:
+            return None
+        gb = self.store.get(kb)
+        if gb is None:
+            return None
+        return _paired_result(key, ga, gb, self.confidence,
+                              from_cache=True, n_rounds=0)
+
+    def flush(self) -> List[Union[QueryResult, PairedResult]]:
         """Answer every queued query; one dispatch per (bucket, round)."""
         queue, self._queue = self._queue, []
         self.n_queries += len(queue)
-        results: List[Optional[QueryResult]] = [None] * len(queue)
-        pendings: Dict[int, _Pending] = {}
+        results: List[Optional[object]] = [None] * len(queue)
+        pendings: Dict[int, object] = {}
         key_owner: Dict[str, int] = {}   # identical questions share one run
         aliases: Dict[int, int] = {}
         keys = [q.key() for q in queue]
 
         for i, (q, key) in enumerate(zip(queue, keys)):
+            if isinstance(q, PairedQuery):
+                cached = self._paired_from_cache(q, key)
+                if cached is not None:
+                    self.n_cache_hits += 1
+                    results[i] = cached
+                elif key in key_owner:
+                    aliases[i] = key_owner[key]
+                else:
+                    key_owner[key] = i
+                    pendings[i] = _PairedPending(q, self.confidence)
+                continue
             grid = self.store.get(key)
             if grid is not None:
                 self.n_cache_hits += 1
@@ -233,38 +496,44 @@ class QueryBroker:
                 pendings[i] = _Pending(q, self.confidence)
 
         while True:
-            # bucket -> [(pending index, rows)]
-            buckets: Dict[Tuple, List[Tuple[int, GridRows]]] = {}
+            # canonical static config -> coalesced dispatch group
+            buckets: Dict[Tuple[str, int], _Bucket] = {}
             for i, pend in pendings.items():
                 if results[i] is not None:
                     continue
-                rows = pend.next_rows()
-                if rows is None:
+                wants = pend.wants()
+                if not wants:
                     results[i] = pend.result(keys[i])
-                    self.store.put(keys[i], results[i].grid,
-                                   meta={"grid": pend.query.grid_dict(),
-                                         "model": store_mod.canonical_model(
-                                             pend.query.model)})
+                    pend.persist(self.store, keys[i])
                     continue
-                bkey = (pend.query.model,
-                        remote_prob_u32(float(pend.query.remote_prob)))
-                buckets.setdefault(bkey, []).append((i, rows))
+                for tag, model, canon, rp, rows in wants:
+                    bkey = (json.dumps(canon, sort_keys=True,
+                                       separators=(",", ":")),
+                            remote_prob_u32(float(rp)))
+                    bucket = buckets.get(bkey)
+                    if bucket is None:
+                        bucket = buckets[bkey] = _Bucket(model, canon, rp)
+                    else:
+                        assert bucket.canon == canon, (
+                            "bucket members' canonical model configs "
+                            "disagree despite equal bucket keys")
+                    bucket.members.append((i, tag, rows))
             if not buckets:
                 break
-            for (model, _rp_u32), members in buckets.items():
-                rp = pendings[members[0][0]].query.remote_prob
-                rows = _concat_rows([r for _, r in members])
+            for bucket in buckets.values():
+                rows = _concat_rows([r for _, _, r in bucket.members])
                 n = len(rows)
                 padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 \
                     else rows
-                grid = self._dispatch(model, padded, rp)
+                grid = self._dispatch(bucket.model, padded, bucket.rp)
                 self.n_dispatches += 1
                 self.dispatch_log.append(dict(
-                    n_queries=len(members), n_rows=n, n_padded=len(padded)))
+                    n_queries=len(bucket.members), n_rows=n,
+                    n_padded=len(padded)))
                 off = 0
-                for i, rws in members:
+                for i, tag, rws in bucket.members:
                     part = _slice_grid(grid, off, off + len(rws))
-                    pendings[i].feed(part)
+                    pendings[i].feed_part(tag, part)
                     off += len(rws)
 
         for i, owner in aliases.items():

@@ -16,6 +16,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, Optional
@@ -100,6 +101,25 @@ def query_key(model, grid: dict, extra: Optional[dict] = None) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
+def model_digest(model) -> str:
+    """sha256 of the canonical model config — the broker's bucket identity
+    (structurally identical models coalesce even when built by different
+    callers) and the cross-model component of paired-query arm keys."""
+    blob = json.dumps(canonical_model(model), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def chunk_key(model, grid: dict, chunk_size: int, chunk_idx: int) -> str:
+    """Content address of one ``run_grid`` chunk. Chunk boundaries are a
+    deterministic function of (grid spec, chunk_size), so persisting each
+    chunk under this key gives cross-process partial-sweep resume: a rerun
+    recomputes only the chunks the store does not already hold."""
+    return query_key(model, grid,
+                     extra={"chunk": {"size": int(chunk_size),
+                                      "idx": int(chunk_idx)}})
+
+
 def _grid_to_npz(grid: GridResult) -> Dict[str, np.ndarray]:
     d = {name: np.asarray(getattr(grid, name)) for name in _GRID_FIELDS}
     d["p"] = np.asarray(grid.p, np.int32)
@@ -118,59 +138,117 @@ def _grid_from_npz(d) -> GridResult:
 class ResultStore:
     """Two-tier (LRU dict over npz files) content-addressed GridResult store.
 
-    Writes are atomic (tmp file + ``os.replace``) so concurrent processes
-    sharing ``root`` can only ever observe complete artifacts; a ``.json``
-    sidecar stores the canonical question next to each answer for
-    debuggability.
+    Writes — both the npz artifact and its ``.json`` question sidecar — are
+    atomic (tmp file + ``os.replace``) so concurrent processes sharing
+    ``root`` can only ever observe complete artifacts. An artifact that is
+    nonetheless unreadable (zero-byte or truncated npz from a killed writer
+    on a filesystem without atomic rename visibility) is treated as a cache
+    miss and quarantined (renamed ``*.corrupt``) rather than poisoning every
+    future query with that key.
+
+    ``gc_bytes`` bounds the disk tier: after every put exceeding the budget,
+    the oldest artifacts (LRU on file mtime; reads refresh it) are evicted
+    until the tier fits. :meth:`write_manifest` snapshots the disk tier as a
+    ``manifest.json`` of (key, bytes, mtime, question digest) rows so
+    fleet-shared object stores (GCS/S3) can sync the directory.
     """
 
     def __init__(self, root: Optional[os.PathLike] = None,
-                 lru_capacity: int = 128):
+                 lru_capacity: int = 128,
+                 gc_bytes: Optional[int] = None):
         self.root = Path(root) if root is not None else DEFAULT_ROOT
         self.lru_capacity = int(lru_capacity)
+        self.gc_bytes = None if gc_bytes is None else int(gc_bytes)
         self._lru: "OrderedDict[str, GridResult]" = OrderedDict()
         self.hits_mem = 0
         self.hits_disk = 0
         self.misses = 0
         self.puts = 0
+        self.corrupt = 0
+        self.gc_evictions = 0
+        self._disk_total: Optional[int] = None   # running estimate for GC
 
     def _path(self, key: str) -> Path:
         return self.root / f"{key}.npz"
+
+    def _sidecar(self, key: str) -> Path:
+        return self.root / f"{key}.json"
 
     def get(self, key: str) -> Optional[GridResult]:
         g = self._lru.get(key)
         if g is not None:
             self._lru.move_to_end(key)
             self.hits_mem += 1
+            # Refresh the disk artifact's mtime on memory hits too: a key
+            # this process serves from its LRU is hot, and must not look
+            # cold to another process's oldest-mtime GC of the shared tier.
+            self._touch(self._path(key))
             return g
         path = self._path(key)
         if path.exists():
-            with np.load(path) as d:
-                g = _grid_from_npz(d)
-            self._remember(key, g)
-            self.hits_disk += 1
-            return g
+            try:
+                with np.load(path) as d:
+                    g = _grid_from_npz(d)
+            except Exception:
+                self._quarantine(key)
+            else:
+                self._remember(key, g)
+                self.hits_disk += 1
+                self._touch(path)
+                return g
         self.misses += 1
         return None
 
-    def put(self, key: str, grid: GridResult,
-            meta: Optional[dict] = None) -> Path:
-        self.root.mkdir(parents=True, exist_ok=True)
+    def _quarantine(self, key: str):
+        """Move an unreadable artifact aside so the key can be recomputed."""
         path = self._path(key)
+        try:
+            os.replace(path, path.with_suffix(".corrupt"))
+        except OSError:
+            pass                   # a concurrent reader may have beaten us
+        self.corrupt += 1
+
+    @staticmethod
+    def _touch(path: Path):
+        """Refresh mtime on read so GC evicts genuinely cold artifacts."""
+        try:
+            os.utime(path)
+        except OSError:
+            pass
+
+    def _write_atomic(self, path: Path, writer):
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                np.savez_compressed(f, **_grid_to_npz(grid))
+                writer(f)
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):
                 os.unlink(tmp)
             raise
+
+    def put(self, key: str, grid: GridResult,
+            meta: Optional[dict] = None) -> Path:
+        self.root.mkdir(parents=True, exist_ok=True)
+        path = self._path(key)
+        self._write_atomic(
+            path, lambda f: np.savez_compressed(f, **_grid_to_npz(grid)))
         if meta is not None:
-            path.with_suffix(".json").write_text(
-                json.dumps(meta, sort_keys=True, indent=1))
+            blob = json.dumps(meta, sort_keys=True, indent=1).encode()
+            self._write_atomic(self._sidecar(key), lambda f: f.write(blob))
         self._remember(key, grid)
         self.puts += 1
+        if self.gc_bytes is not None:
+            # Amortized budget check: one full directory scan seeds a
+            # running byte estimate, each put increments it, and the real
+            # (scanning) GC only runs when the estimate exceeds the budget
+            # — store fills stay O(N), not O(N²) stat calls.
+            if self._disk_total is None:
+                self._disk_total = self.disk_bytes()
+            else:
+                self._disk_total += self._entry_bytes(key)
+            if self._disk_total > self.gc_bytes:
+                self.gc(self.gc_bytes)
         return path
 
     def _remember(self, key: str, grid: GridResult):
@@ -186,7 +264,135 @@ class ResultStore:
         """Drop the in-process tier (the disk tier keeps serving)."""
         self._lru.clear()
 
+    # -- disk-tier bookkeeping: GC + manifest -------------------------------
+
+    def _entry_bytes(self, key: str) -> int:
+        size = 0
+        for p in (self._path(key), self._sidecar(key)):
+            try:
+                size += p.stat().st_size
+            except OSError:
+                pass
+        return size
+
+    def _disk_entries(self) -> list:
+        """(key, npz bytes + sidecar bytes, mtime) per artifact on disk."""
+        out = []
+        if not self.root.is_dir():
+            return out
+        for path in self.root.glob("*.npz"):
+            try:
+                st = path.stat()
+            except OSError:
+                continue           # evicted by a concurrent process
+            size = st.st_size
+            side = path.with_suffix(".json")
+            try:
+                size += side.stat().st_size
+            except OSError:
+                pass
+            out.append((path.stem, size, st.st_mtime))
+        return out
+
+    #: `.tmp` files younger than this may belong to a live writer (deleting
+    #: one would break its in-flight ``os.replace``); older ones are wreckage.
+    _TMP_STALE_S = 3600.0
+
+    def _junk_entries(self) -> list:
+        """(path, bytes) of quarantined ``.corrupt`` files and stale ``.tmp``
+        wreckage — junk that must count against the byte budget (it lives in
+        the tier) and that GC deletes before touching real artifacts."""
+        out = []
+        if not self.root.is_dir():
+            return out
+        now = time.time()
+        for pattern, min_age in (("*.corrupt", 0.0),
+                                 ("*.tmp", self._TMP_STALE_S)):
+            for path in self.root.glob(pattern):
+                try:
+                    st = path.stat()
+                except OSError:
+                    continue
+                if now - st.st_mtime >= min_age:
+                    out.append((path, st.st_size))
+        return out
+
+    def disk_bytes(self) -> int:
+        """Bytes the disk tier occupies: artifacts + sidecars + junk
+        (quarantined/stale files) — the quantity ``gc_bytes`` bounds."""
+        return (sum(size for _, size, _ in self._disk_entries())
+                + sum(size for _, size in self._junk_entries()))
+
+    def gc(self, max_bytes: Optional[int] = None) -> int:
+        """Shrink the disk tier to ``max_bytes`` (default: the store's
+        ``gc_bytes`` budget): junk (quarantined ``.corrupt``, stale ``.tmp``)
+        is deleted first, then the oldest-mtime artifacts (npz + sidecar)
+        until the tier fits. Returns the number of *artifacts* evicted. The
+        in-process LRU is untouched — an evicted answer this process already
+        holds keeps serving from memory; only the shared disk tier shrinks.
+        """
+        budget = self.gc_bytes if max_bytes is None else int(max_bytes)
+        if budget is None:
+            raise ValueError("gc() needs max_bytes or a gc_bytes budget")
+        entries = sorted(self._disk_entries(), key=lambda e: e[2])
+        junk = self._junk_entries()
+        total = sum(size for _, size, _ in entries) \
+            + sum(size for _, size in junk)
+        if total > budget:
+            for path, size in junk:
+                try:
+                    os.unlink(path)
+                    total -= size
+                except OSError:
+                    pass
+        evicted = 0
+        for key, size, _ in entries:
+            if total <= budget:
+                break
+            for p in (self._path(key), self._sidecar(key)):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+            total -= size
+            evicted += 1
+        self.gc_evictions += evicted
+        self._disk_total = total
+        return evicted
+
+    def manifest(self) -> dict:
+        """Disk-tier listing: one row per artifact with its content key,
+        total bytes (npz + sidecar), mtime and the sha256 of the sidecar's
+        canonical question (null when the artifact has no sidecar)."""
+        arts = []
+        for key, size, mtime in sorted(self._disk_entries()):
+            side = self._sidecar(key)
+            qd = None
+            if side.exists():
+                qd = hashlib.sha256(side.read_bytes()).hexdigest()
+            arts.append(dict(key=key, bytes=int(size), mtime=float(mtime),
+                             question_digest=qd))
+        return {"engine_version": eng.ENGINE_VERSION,
+                "n_artifacts": len(arts),
+                "total_bytes": int(sum(a["bytes"] for a in arts)),
+                "artifacts": arts}
+
+    def write_manifest(self) -> Path:
+        """Atomically write ``manifest.json`` into the store root."""
+        self.root.mkdir(parents=True, exist_ok=True)
+        blob = json.dumps(self.manifest(), sort_keys=True, indent=1).encode()
+        path = self.root / "manifest.json"
+        self._write_atomic(path, lambda f: f.write(blob))
+        return path
+
+    def read_manifest(self) -> Optional[dict]:
+        path = self.root / "manifest.json"
+        if not path.exists():
+            return None
+        return json.loads(path.read_text())
+
     def stats(self) -> dict:
         return dict(hits_mem=self.hits_mem, hits_disk=self.hits_disk,
                     misses=self.misses, puts=self.puts,
+                    corrupt=self.corrupt, gc_evictions=self.gc_evictions,
                     lru_len=len(self._lru))

@@ -1,0 +1,371 @@
+"""Distributional service tier (DESIGN.md §5): streaming P² quantiles,
+paired CRN policy comparison, store GC/manifest, store-backed chunk resume —
+plus the store/broker bug-tail fixes:
+
+* sidecar writes are atomic (no truncated ``.json`` observable);
+* corrupt/zero-byte npz artifacts are quarantined, not query-poisoning;
+* broker buckets coalesce on canonical model config, not object identity;
+* ``run_grid(start_chunk=...)`` without ``chunk_size`` raises instead of
+  silently recomputing everything as chunk 0.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import one_cluster
+from repro.core.sweep import run_grid
+from repro.service import (P2Quantiles, PairedPolicy, PairedQuery,
+                           QuantilePolicy, ResultStore, SimulationService,
+                           chunk_key, model_digest, paired_summary,
+                           summarize_cells)
+
+TOPO = one_cluster(4, 2)
+
+
+def _svc(tmp_path, **kw) -> SimulationService:
+    return SimulationService(root=tmp_path / "store", **kw)
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes
+# ---------------------------------------------------------------------------
+
+def test_sidecar_write_is_atomic(tmp_path):
+    """A failing sidecar serialization must not leave a partial ``.json``
+    next to the artifact (concurrent readers on a shared root may open the
+    sidecar at any moment), and no tmp litter may survive."""
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2)
+    store = ResultStore(root=tmp_path)
+    with pytest.raises(TypeError):
+        store.put("k1", g, meta={"bad": object()})      # not JSON-able
+    assert not (tmp_path / "k1.json").exists()
+    assert not list(tmp_path.glob("*.tmp"))
+    # a good put round-trips the sidecar
+    store.put("k1", g, meta={"note": "q"})
+    assert json.loads((tmp_path / "k1.json").read_text()) == {"note": "q"}
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_corrupt_npz_is_quarantined_not_poisonous(tmp_path):
+    """A zero-byte or garbage npz (killed writer on a non-atomic-visibility
+    FS) must behave as a miss, get renamed ``*.corrupt``, be counted in
+    stats — and the key must be recomputable afterwards."""
+    store = ResultStore(root=tmp_path)
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2)
+    store.put("k1", g)
+    store.clear_memory()
+    (tmp_path / "k1.npz").write_bytes(b"")              # truncated artifact
+    assert store.get("k1") is None
+    assert store.corrupt == 1 and store.stats()["corrupt"] == 1
+    assert (tmp_path / "k1.corrupt").exists()
+    assert not (tmp_path / "k1.npz").exists()
+    # the key is healthy again after a fresh put
+    store.put("k1", g)
+    store.clear_memory()
+    g2 = store.get("k1")
+    assert g2 is not None and np.array_equal(g2.makespan, g.makespan)
+    # garbage bytes (not just empty) quarantine too
+    (tmp_path / "k2.npz").write_bytes(b"not a zipfile at all")
+    assert store.get("k2") is None and store.corrupt == 2
+
+
+def test_broker_coalesces_across_callers(tmp_path):
+    """Structurally identical models built by *different* callers must land
+    in one bucket (canonical-config keying, not object identity)."""
+    svc = _svc(tmp_path)
+    q1 = svc.make_query(one_cluster(4, 2), W_list=[4000], lam_list=[2, 5],
+                        theta=((0, 0),), reps=3, seed0=7)
+    q2 = svc.make_query(one_cluster(4, 2), W_list=[4000], lam_list=[2, 5],
+                        theta=((0, 2),), reps=3, seed0=8)
+    assert q1.model is not q2.model
+    assert model_digest(q1.model) == model_digest(q2.model)
+    svc.query_many([q1, q2])
+    assert svc.n_dispatches == 1
+    assert svc.broker.dispatch_log[0]["n_queries"] == 2
+
+
+def test_start_chunk_requires_chunk_size():
+    with pytest.raises(ValueError, match="chunk_size"):
+        run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2, start_chunk=1)
+    with pytest.raises(ValueError, match="chunk_size"):
+        run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2,
+                 chunk_lookup=lambda ci: None)
+
+
+# ---------------------------------------------------------------------------
+# streaming P² quantiles
+# ---------------------------------------------------------------------------
+
+def test_p2_matches_np_quantile_on_fixed_ensembles():
+    rng = np.random.default_rng(3)
+    qs = (0.1, 0.5, 0.9)
+    data = {0: rng.normal(100, 15, 2500),
+            1: rng.exponential(40, 2500) + 10,
+            2: rng.uniform(0, 200, 2500)}
+    p2 = P2Quantiles.zeros(3, qs)
+    for lo in range(0, 2500, 25):               # interleaved batches
+        idx = np.repeat([0, 1, 2], 25)
+        vals = np.concatenate([data[c][lo:lo + 25] for c in range(3)])
+        p2.update(idx, vals)
+    est = p2.quantile()
+    for c in range(3):
+        exact = np.quantile(data[c], qs)
+        assert np.abs(est[c] - exact).max() / np.abs(exact).max() < 0.03, \
+            (c, est[c], exact)
+    # CI half-widths are finite and shrink-scale plausible
+    hw = p2.half_width()
+    assert np.isfinite(hw).all() and (hw > 0).all()
+
+
+def test_p2_stream_equals_one_shot_replay():
+    """Round-by-round streaming and a one-shot replay of the concatenated
+    ensemble must produce identical markers (order is preserved per cell) —
+    this is what makes cached and fresh summaries agree."""
+    rng = np.random.default_rng(5)
+    vals = rng.normal(50, 9, 300)
+    idx = rng.integers(0, 2, 300)
+    a = P2Quantiles.zeros(2)
+    for lo in range(0, 300, 30):
+        a.update(idx[lo:lo + 30], vals[lo:lo + 30])
+    b = P2Quantiles.zeros(2)
+    b.update(idx, vals)
+    assert np.array_equal(a.h, b.h) and np.array_equal(a.pos, b.pos)
+    assert np.array_equal(a.n, b.n)
+
+
+def test_celltable_quantiles_close_to_exact(tmp_path):
+    """Acceptance: the service emits median/p10/p90 per cell from streaming
+    P² within estimator tolerance of np.quantile on the gathered ensemble."""
+    svc = _svc(tmp_path)
+    r = svc.query(TOPO, W_list=[4000], lam_list=[2, 20], reps=64, seed0=13)
+    cells = r.cells
+    assert cells.quantile_fracs == (0.1, 0.5, 0.9)
+    ms = np.asarray(r.grid.makespan, float)
+    lam = np.asarray(r.grid.lam)
+    for c, l in enumerate([2, 20]):
+        ens = ms[lam == l]
+        exact = np.quantile(ens, cells.quantile_fracs)
+        est = cells.quantiles[c]
+        spread = max(exact[-1] - exact[0], 1.0)
+        assert np.abs(est - exact).max() <= 0.25 * spread, (est, exact)
+        # the P² median matches the exact median column closely
+        assert abs(cells.quantile(0.5)[c] - cells.median[c]) <= 0.15 * spread
+
+
+def test_quantile_policy_converges_through_service(tmp_path):
+    svc = _svc(tmp_path)
+    pol = QuantilePolicy(ci_half_width=0.05, relative=True, batch_reps=16,
+                         min_reps=16, max_reps=512)
+    r = svc.query(TOPO, W_list=[4000], lam_list=[2, 20], ci=pol, seed0=11)
+    cells = r.cells
+    assert (cells.n >= pol.min_reps).all()
+    capped = cells.n >= pol.max_reps
+    rel = cells.quantile_hw / np.maximum(np.abs(cells.quantiles), 1e-9)
+    assert (capped | (rel <= pol.ci_half_width + 1e-12).all(axis=1)).all()
+    # replay is a cache hit with identical statistics
+    r2 = svc.query(TOPO, W_list=[4000], lam_list=[2, 20], ci=pol, seed0=11)
+    assert r2.from_cache
+    assert np.array_equal(r2.cells.quantiles, cells.quantiles)
+
+
+# ---------------------------------------------------------------------------
+# paired CRN policy comparison
+# ---------------------------------------------------------------------------
+
+def test_paired_vs_independent_ci_shrinkage(tmp_path):
+    """Acceptance: CRN pairing yields a tighter CI on the policy difference
+    than independent arms at the same n — and therefore a significant
+    verdict with fewer reps."""
+    svc = _svc(tmp_path)
+    W, lam = 20000, 20
+    qa = svc.make_query(TOPO, W_list=[W], lam_list=[lam], reps=32, seed0=17)
+    qb = svc.make_query(TOPO, W_list=[W], lam_list=[lam], reps=32, seed0=17,
+                        mwt=True)
+    res = svc.query_pair(qa, qb)                # fixed 32 CRN pairs
+    pc = res.paired
+    assert int(pc.n[0]) == 32
+    # same seeds in both arms = the CRN precondition
+    assert np.array_equal(res.grid_a.seed, res.grid_b.seed)
+    # paired CI strictly tighter than the independent-arms CI at equal n
+    assert pc.delta_half_width[0] < pc.independent_half_width()[0]
+
+
+def test_paired_adaptive_reaches_verdict_and_caches(tmp_path):
+    svc = _svc(tmp_path)
+    W, lam = 20000, 20
+    qa = svc.make_query(TOPO, W_list=[W], lam_list=[lam], reps=8, seed0=17)
+    qb = svc.make_query(TOPO, W_list=[W], lam_list=[lam], reps=8, seed0=17,
+                        mwt=True)
+    pol = PairedPolicy(batch_reps=8, min_reps=8, max_reps=256)
+    res = svc.query_pair(qa, qb, policy=pol)
+    pc = res.paired
+    assert pc.significant[0] or int(pc.n[0]) >= pol.max_reps
+    d0 = svc.n_dispatches
+    res2 = svc.query_pair(qa, qb, policy=pol)
+    assert res2.from_cache and svc.n_dispatches == d0
+    assert np.array_equal(res2.paired.delta_mean, pc.delta_mean)
+
+
+def test_paired_arms_may_differ_in_theta(tmp_path):
+    """θ is policy, not workload: arms pair positionally with their own
+    thresholds on shared seeds."""
+    svc = _svc(tmp_path)
+    qa = svc.make_query(TOPO, W_list=[4000], lam_list=[20], theta=((0, 0),),
+                        reps=8, seed0=3)
+    qb = svc.make_query(TOPO, W_list=[4000], lam_list=[20], theta=((0, 2),),
+                        reps=8, seed0=3)
+    res = svc.query_pair(qa, qb)
+    pc = res.paired
+    assert int(pc.theta_comm_a[0]) == 0 and int(pc.theta_comm_b[0]) == 2
+    assert np.array_equal(res.grid_a.seed, res.grid_b.seed)
+
+
+def test_paired_query_validates_grids(tmp_path):
+    svc = _svc(tmp_path)
+    qa = svc.make_query(TOPO, W_list=[4000], lam_list=[2], reps=4, seed0=3)
+    qb = svc.make_query(TOPO, W_list=[4000], lam_list=[2], reps=4, seed0=4)
+    with pytest.raises(ValueError, match="seed0"):
+        PairedQuery(a=qa, b=qb)
+    qc = svc.make_query(TOPO, W_list=[4000], lam_list=[2], reps=4, seed0=3,
+                        ci=0.01)
+    with pytest.raises(ValueError, match="adaptive"):
+        PairedQuery(a=qa, b=qc)
+
+
+def test_paired_summary_synthetic_crn_vs_independent():
+    """Synthetic check of the statistics themselves: with a large shared
+    noise component, the paired delta CI beats the independent-arms CI by
+    roughly the correlation factor."""
+    rng = np.random.default_rng(11)
+    base = rng.normal(1000.0, 50.0, 400)        # shared CRN noise
+    a = base + rng.normal(0.0, 5.0, 400)
+    b = base + 10.0 + rng.normal(0.0, 5.0, 400)  # true gap: -10 for A
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=4)
+
+    import dataclasses
+
+    def fake(ms):
+        reps = 400 // len(g.makespan) + 1
+        fields = {f.name: np.tile(np.asarray(getattr(g, f.name)), reps)[:400]
+                  for f in dataclasses.fields(g) if f.name not in ("p", "extras")}
+        fields["makespan"] = ms
+        fields["overflow"] = np.zeros(400, bool)
+        extras = {k: np.tile(np.asarray(v), reps)[:400]
+                  for k, v in g.extras.items()}
+        return dataclasses.replace(g, extras=extras, **fields)
+
+    pc = paired_summary(fake(a), fake(b))
+    assert pc.significant[0] and pc.faster[0] == -1      # A faster
+    assert pc.delta_half_width[0] < 0.25 * pc.independent_half_width()[0]
+    assert abs(pc.delta_mean[0] + 10.0) < 2.0
+
+
+# ---------------------------------------------------------------------------
+# store GC + manifest
+# ---------------------------------------------------------------------------
+
+def test_gc_enforces_byte_budget_oldest_first(tmp_path):
+    import os
+    store = ResultStore(root=tmp_path)
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2)
+    for i in range(6):
+        p = store.put(f"k{i}", g, meta={"i": i})
+        os.utime(p, (1000.0 + i, 1000.0 + i))   # deterministic age order
+    per = store.disk_bytes() // 6
+    budget = int(3.5 * per)
+    evicted = store.gc(budget)
+    assert evicted == 3 and store.gc_evictions == 3
+    assert store.disk_bytes() <= budget
+    # oldest three gone (disk tier), newest three intact
+    for i in range(3):
+        assert not (tmp_path / f"k{i}.npz").exists()
+        assert not (tmp_path / f"k{i}.json").exists()
+    for i in range(3, 6):
+        assert (tmp_path / f"k{i}.npz").exists()
+    # budget wired through put(): next put GCs automatically
+    store.gc_bytes = budget
+    store.put("k9", g)
+    assert store.disk_bytes() <= budget
+
+
+def test_gc_counts_and_clears_quarantine_junk(tmp_path):
+    """Quarantined ``.corrupt`` files live in the tier, so they count
+    against the byte budget and are the first thing GC deletes."""
+    store = ResultStore(root=tmp_path)
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2)
+    store.put("ka", g)
+    (tmp_path / "kb.npz").write_bytes(b"x" * 4096)      # corrupt artifact
+    store.clear_memory()
+    assert store.get("kb") is None                      # quarantined
+    assert (tmp_path / "kb.corrupt").exists()
+    with_junk = store.disk_bytes()
+    assert with_junk >= 4096                            # junk is accounted
+    evicted = store.gc(with_junk - 1)                   # barely over budget
+    assert evicted == 0                                 # junk went first...
+    assert not (tmp_path / "kb.corrupt").exists()
+    assert (tmp_path / "ka.npz").exists()               # ...artifact kept
+
+
+def test_manifest_roundtrip(tmp_path):
+    import hashlib
+    store = ResultStore(root=tmp_path)
+    g = run_grid(TOPO, W_list=[2000], lam_list=[2], reps=2)
+    store.put("ka", g, meta={"q": 1})
+    store.put("kb", g)                           # no sidecar
+    store.write_manifest()
+    m = store.read_manifest()
+    assert m == store.manifest()
+    assert m["n_artifacts"] == 2
+    by_key = {a["key"]: a for a in m["artifacts"]}
+    assert by_key["kb"]["question_digest"] is None
+    side = (tmp_path / "ka.json").read_bytes()
+    assert by_key["ka"]["question_digest"] == \
+        hashlib.sha256(side).hexdigest()
+    assert m["total_bytes"] == store.disk_bytes()
+
+
+# ---------------------------------------------------------------------------
+# store-backed resumable sweeps
+# ---------------------------------------------------------------------------
+
+def test_sweep_resumes_from_store_after_kill(tmp_path):
+    """Acceptance: a chunked sweep killed mid-run resumes from the store,
+    recomputing only unfinished chunks — across service instances (i.e.
+    across processes sharing the root)."""
+    svc = _svc(tmp_path)
+    kw = dict(W_list=[3000], lam_list=[2, 5], reps=3, chunk_size=2)
+
+    class Kill(RuntimeError):
+        pass
+
+    def die_after_first(ci, g):
+        if ci >= 1:
+            raise Kill()
+
+    with pytest.raises(Kill):
+        svc.sweep(TOPO, on_chunk=die_after_first, **kw)
+    # chunks 0 and 1 are persisted (on_chunk fires after the store put)
+
+    svc2 = _svc(tmp_path)                        # fresh process over same root
+    computed = []
+    full = svc2.sweep(TOPO, on_chunk=lambda ci, g: computed.append(ci), **kw)
+    assert computed == [2]                       # only the unfinished chunk
+    whole = run_grid(TOPO, W_list=[3000], lam_list=[2, 5], reps=3)
+    assert np.array_equal(full.makespan, whole.makespan)
+    assert np.array_equal(full.seed, whole.seed)
+
+    # a third run recomputes nothing at all
+    computed3 = []
+    again = svc2.sweep(TOPO, on_chunk=lambda ci, g: computed3.append(ci), **kw)
+    assert computed3 == []
+    assert np.array_equal(again.makespan, whole.makespan)
+
+
+def test_chunk_keys_distinct_per_chunk_and_size():
+    from repro.core.sweep import canonical_grid, resolve_model
+    m = resolve_model(TOPO, "divisible", W_list=[3000], lam_list=[2, 5])
+    grid = canonical_grid([3000], [2, 5], 3)
+    ks = {chunk_key(m, grid, 2, i) for i in range(3)}
+    assert len(ks) == 3
+    assert chunk_key(m, grid, 4, 0) not in ks
