@@ -15,6 +15,10 @@ artifacts/bench/). Figures:
                          replication savings at equal CI width
   paired_comparison      paired CRN A/B queries vs independent arms:
                          reps-to-significance for a small policy gap
+  backend_matrix         the same grid on every available execution backend
+                         (oracle / jax / pallas / pallas_interpret): rows/s
+                         + bit-parity columns, emitted as
+                         artifacts/bench/BENCH_backends.json
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -400,6 +404,66 @@ def paired_comparison(reps: int):
     shutil.rmtree(tmp, ignore_errors=True)
 
 
+def backend_matrix(reps: int):
+    """One grid, every available execution backend: throughput + parity.
+
+    The parity column asserts the backend contract (bit-identical rows on
+    every backend — what makes the store's keys backend-free); the rows/s
+    column starts the cross-substrate perf trajectory (BENCH_backends.json
+    is uploaded per commit by the extended CI job)."""
+    from repro.core import engine as eng
+    from repro.core.backend import (backend_names, default_backend_name,
+                                    get_backend)
+    from repro.core.sweep import grid_rows, resolve_model, run_rows
+
+    p, W, lams = 16, 30_000, (2, 10)
+    n_reps = min(max(reps // 4, 2), 6)      # oracle is a python loop
+    topo = one_cluster(p, 1)
+    rows = grid_rows([W], lams, n_reps)
+    model = resolve_model(topo, "divisible", W_list=[W], lam_list=lams,
+                          pow2_max_events=True)
+    ref = run_rows(model, rows, backend="jax")
+    out = []
+    for name in backend_names():
+        be = get_backend(name)
+        caps = be.capabilities()
+        if not caps.available:
+            out.append(dict(backend=name, available=False, note=caps.note))
+            continue
+        run = lambda: run_rows(model, rows, backend=name)
+        run()                                # compile + warm
+        t0 = time.time()
+        g = run()
+        dt = max(time.time() - t0, 1e-9)
+        parity = all(
+            np.array_equal(np.asarray(getattr(g, f)),
+                           np.asarray(getattr(ref, f)))
+            for f in ("makespan", "n_requests", "n_success", "n_fail",
+                      "total_idle", "startup_end", "overflow")) \
+            and np.array_equal(g.extras["executed"], ref.extras["executed"])
+        out.append(dict(
+            backend=name, available=True, kind=caps.kind,
+            devices="+".join(caps.devices), n_rows=len(rows),
+            rows_per_s=round(len(rows) / dt, 2),
+            events_per_s=round(float(g.extras["n_events"].sum()) / dt, 1),
+            us_per_row=round(dt * 1e6 / len(rows), 1),
+            parity_vs_jax=bool(parity)))
+    _write_csv("backend_matrix", out)
+    BENCH.mkdir(parents=True, exist_ok=True)
+    with open(BENCH / "BENCH_backends.json", "w") as f:
+        json.dump({"engine_version": eng.ENGINE_VERSION,
+                   "default_backend": default_backend_name(),
+                   "grid": dict(p=p, W=W, lams=list(lams), reps=n_reps),
+                   "backends": out}, f, indent=1, sort_keys=True)
+    ran = [r for r in out if r.get("available")]
+    bad = [r["backend"] for r in ran if not r["parity_vs_jax"]]
+    fastest = max(ran, key=lambda r: r["rows_per_s"])
+    _row("backend_matrix", fastest["us_per_row"],
+         f"{len(ran)}/{len(out)} backends available; parity "
+         f"{'OK' if not bad else 'FAIL ' + ','.join(bad)}; fastest "
+         f"{fastest['backend']} at {fastest['rows_per_s']:,.0f} rows/s")
+
+
 def roofline(_reps: int):
     """Aggregate the dry-run artifacts into the §Roofline table."""
     cells = sorted((ART / "dryrun").glob("*.json"))
@@ -461,6 +525,7 @@ def main():
         "sched_planner": lambda: sched_planner(reps),
         "service_throughput": lambda: service_throughput(reps),
         "paired_comparison": lambda: paired_comparison(reps),
+        "backend_matrix": lambda: backend_matrix(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

@@ -110,6 +110,35 @@ def mwt_vs_swt(service=None, reps=24):
               f"(paper: startup up to 2x+, overall ~flat)")
 
 
+def execution_backends(reps=4):
+    """Beyond-paper: the same grid through every available execution
+    backend (DESIGN.md §7). The table's parity column is the contract that
+    lets the content-addressed store share cached answers across backends —
+    a TPU fleet's Pallas fills serve CPU replicas and vice versa."""
+    from repro.core.backend import backend_names, get_backend
+    from repro.core.sweep import grid_rows, resolve_model, run_rows
+
+    print("\n=== Execution backends: one grid, every substrate ===")
+    topo = one_cluster(8, 1)
+    rows = grid_rows([20_000], [2, 30], reps)
+    model = resolve_model(topo, "divisible", W_list=[20_000], lam_list=[2, 30],
+                          pow2_max_events=True)
+    ref = None
+    for name in backend_names():
+        caps = get_backend(name).capabilities()
+        if not caps.available:
+            print(f"  {name:16s} unavailable ({caps.note})")
+            continue
+        g = run_rows(model, rows, backend=name)
+        if ref is None:
+            ref = g
+        ok = np.array_equal(g.makespan, ref.makespan) and np.array_equal(
+            g.extras["executed"], ref.extras["executed"])
+        print(f"  {name:16s} kind={caps.kind:9s} devices={caps.devices} "
+              f"median Cmax={float(np.median(g.makespan)):8.0f} "
+              f"bit-parity={'OK' if ok else 'FAIL'}")
+
+
 def all_task_models(reps=8):
     """Beyond-paper: one sweep program per task model (§2.1.1-§2.1.3),
     all through the unified event core + batching layer."""
@@ -139,4 +168,5 @@ if __name__ == "__main__":
     acceptable_latency()
     mwt_vs_swt(svc)
     all_task_models()
+    execution_backends()
     print(f"\nservice: {svc.stats()}")

@@ -18,4 +18,8 @@ from repro.core.divisible import (  # noqa: F401
 from repro.core.sweep import (  # noqa: F401
     run_grid, quick_sim, GridResult, simulate_sharded, make_model, as_model,
 )
+from repro.core.backend import (  # noqa: F401
+    BackendCapabilities, ExecutionBackend, available_backends, backend_names,
+    default_backend_name, get_backend, register_backend,
+)
 from repro.core import analysis  # noqa: F401

@@ -1,0 +1,318 @@
+"""Pluggable execution backends (DESIGN.md §7).
+
+The engine's event loop is one piece of traced code; *where* it executes is
+a deployment decision. This module makes that decision a value: an
+:class:`ExecutionBackend` turns canonical grid rows into a
+:class:`~repro.core.sweep.GridResult`, and a registry maps names to the four
+substrates the repo ships —
+
+* ``oracle``           — the serial numpy twins (``repro.core.oracle``):
+                         slow, dependency-light ground truth;
+* ``jax``              — the jit/vmap engine (``engine.simulate_batch``),
+                         the default on CPU/GPU hosts;
+* ``pallas``           — the real ``pallas_call`` through
+                         ``kernels/ws_sim.py`` (Mosaic on TPU): per-scenario
+                         state VMEM-resident for the whole event loop;
+* ``pallas_interpret`` — the same kernel in interpret mode: CI-runnable on
+                         any host, bit-identical by construction.
+
+Every backend is **bit-identical** on the same rows (the parity tests in
+``tests/test_backends.py`` enforce it), which is why the content-addressed
+result store needs no backend key component: a cache fill from any backend
+serves every other.
+
+Auto-detection: ``default_backend_name()`` honours the ``REPRO_WS_BACKEND``
+environment variable, then picks ``pallas`` iff a TPU is attached, else
+``jax``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import oracle as orc
+from repro.core import sweep as sw
+from repro.core import adaptive as ad
+from repro.core import dag as dg
+from repro.core import divisible as dv
+
+#: Environment override consumed by :func:`default_backend_name` and the
+#: Pallas wrapper's interpret default (:func:`pallas_interpret_default`).
+BACKEND_ENV = "REPRO_WS_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can run, reported without executing anything."""
+    name: str
+    available: bool           # can run on this host right now
+    kind: str                 # "reference" | "xla" | "pallas"
+    devices: Tuple[str, ...]  # jax device platforms it would execute on
+    max_p: int                # largest processor count supported
+    max_events_pow2: bool     # dispatcher should round static caps to pow2
+    note: str = ""
+
+
+class ExecutionBackend:
+    """One execution substrate: rows in, GridResult out.
+
+    Subclasses implement :meth:`_run_batch` (model + batched Scenario ->
+    the model's result NamedTuple with a leading batch axis) and
+    :meth:`capabilities`; :meth:`run_rows` is the shared entry point used by
+    ``sweep.run_rows`` and the service broker.
+    """
+
+    name = "?"
+
+    def capabilities(self) -> BackendCapabilities:
+        raise NotImplementedError
+
+    def _run_batch(self, model: eng.TaskModel, scn: eng.Scenario):
+        raise NotImplementedError
+
+    def _check(self, model: eng.TaskModel):
+        caps = self.capabilities()
+        if not caps.available:
+            raise RuntimeError(
+                f"backend {self.name!r} is not available on this host"
+                + (f" ({caps.note})" if caps.note else ""))
+        if model.p > caps.max_p:
+            raise ValueError(
+                f"backend {self.name!r} supports p <= {caps.max_p}, "
+                f"got p={model.p}")
+
+    def run_rows(self, model, rows: "sw.GridRows", remote_prob: float = 0.25,
+                 ev_budget=None) -> "sw.GridResult":
+        """Run one batched simulation over canonical rows.
+
+        ``ev_budget`` is an optional per-row (or scalar) event budget; rows
+        behave exactly as if the model's static ``max_events`` were their
+        budget (see ``engine.Scenario.max_events``).
+        """
+        model = sw.as_model(model)
+        self._check(model)
+        scn = sw.scenario_from_rows(rows, remote_prob=remote_prob,
+                                    ev_budget=ev_budget)
+        res = self._run_batch(model, scn)
+        return sw.grid_from_result(model.p, rows, res)
+
+
+def _device_platforms() -> Tuple[str, ...]:
+    try:
+        return tuple(sorted({d.platform for d in jax.devices()}))
+    except RuntimeError:  # no backend at all (unusual; keep capabilities total)
+        return ()
+
+
+def _on_tpu() -> bool:
+    return "tpu" in _device_platforms()
+
+
+class OracleBackend(ExecutionBackend):
+    """Serial numpy reference: loops the oracle twins row by row.
+
+    Deliberately slow; exists so any result of any other backend can be
+    reproduced with no JAX in the loop. Does not model capacity ``halt``
+    (DAG deque / adaptive pool overflow) or trace logging — configs using
+    those belong on the jitted backends.
+    """
+
+    name = "oracle"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, available=True, kind="reference",
+            devices=("cpu",), max_p=256, max_events_pow2=False,
+            note="serial python loop; no capacity-halt or trace modelling")
+
+    def run_rows(self, model, rows, remote_prob: float = 0.25,
+                 ev_budget=None) -> "sw.GridResult":
+        model = sw.as_model(model)
+        self._check(model)
+        if model.log_trace:
+            raise ValueError("oracle backend does not record traces; "
+                             "use the 'jax' backend for log_trace models")
+        n = len(rows)
+        budgets = np.broadcast_to(
+            np.asarray(eng.INF32 if ev_budget is None else ev_budget,
+                       np.int64), (n,))
+        outs = [self._run_row(model, rows, k,
+                              min(int(model.max_events), int(budgets[k])),
+                              float(remote_prob))
+                for k in range(n)]
+        res = jax.tree.map(lambda *leaves: np.stack(leaves), *outs)
+        return sw.grid_from_result(model.p, rows, res)
+
+    def _run_row(self, model, rows, k: int, max_events: int, rp: float):
+        kw = dict(seed=int(rows.seed[k]),
+                  lam_local=int(rows.lam_local[k]),
+                  lam_remote=int(rows.lam_remote[k]),
+                  mwt=model.mwt, remote_prob=rp, max_events=max_events)
+        i32 = lambda v: np.int32(v)
+        trace = np.zeros((1, 4), np.int32)     # log_trace=False engine shape
+        if isinstance(model, dv.DivisibleModel):
+            o = orc.simulate_oracle(
+                model.topology, int(rows.W[k]),
+                theta_static=int(rows.theta_static[k]),
+                theta_comm=int(rows.theta_comm[k]), **kw)
+            return dv.SimResult(
+                makespan=i32(o.makespan), n_events=i32(o.n_events),
+                n_requests=i32(o.n_requests), n_success=i32(o.n_success),
+                n_fail=i32(o.n_fail), total_idle=i32(o.total_idle),
+                startup_end=i32(o.startup_end),
+                executed=np.asarray(o.executed, np.int32),
+                overflow=np.bool_(o.overflow), trace=trace,
+                n_trace=i32(0))
+        if isinstance(model, dg.DagModel):
+            o = orc.simulate_dag_oracle(
+                model.topology, model.cfg.dag,
+                theta_static=int(rows.theta_static[k]),
+                owner_lifo=model.cfg.owner_lifo, **kw)
+            return dg.DagSimResult(
+                makespan=i32(o["makespan"]), n_events=i32(o["n_events"]),
+                n_requests=i32(o["n_requests"]),
+                n_success=i32(o["n_success"]), n_fail=i32(o["n_fail"]),
+                total_idle=i32(o["total_idle"]),
+                startup_end=i32(o["startup_end"]),
+                executed=np.asarray(o["executed"], np.int32),
+                tasks_run=np.asarray(o["tasks_run"], np.int32),
+                n_completed=i32(o["n_completed"]),
+                overflow=np.bool_(o["overflow"]), trace=trace,
+                n_trace=i32(0))
+        if isinstance(model, ad.AdaptiveModel):
+            o = orc.simulate_adaptive_oracle(
+                model.topology, int(rows.W[k]),
+                theta_static=int(rows.theta_static[k]),
+                theta_comm=int(rows.theta_comm[k]),
+                merge_alpha=model.cfg.merge_alpha,
+                merge_beta_num=model.cfg.merge_beta_num,
+                merge_beta_den=model.cfg.merge_beta_den, **kw)
+            return ad.AdaptiveSimResult(
+                makespan=i32(o["makespan"]), n_events=i32(o["n_events"]),
+                n_requests=i32(o["n_requests"]),
+                n_success=i32(o["n_success"]), n_fail=i32(o["n_fail"]),
+                n_splits=i32(o["n_splits"]),
+                total_idle=i32(o["total_idle"]),
+                startup_end=i32(o["startup_end"]),
+                executed=np.asarray(o["executed"], np.int32),
+                total_merge_work=i32(o["total_merge_work"]),
+                n_created=i32(o["n_created"]),
+                n_completed=i32(o["n_completed"]),
+                overflow=np.bool_(o["overflow"]), trace=trace,
+                n_trace=i32(0))
+        raise TypeError(f"oracle backend has no twin for {type(model)!r}")
+
+
+class JaxBackend(ExecutionBackend):
+    """The jit/vmap engine — the current (and CPU/GPU default) path."""
+
+    name = "jax"
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, available=True, kind="xla",
+            devices=_device_platforms(), max_p=1 << 14,
+            max_events_pow2=False)
+
+    def _run_batch(self, model, scn):
+        return eng.simulate_batch(model, scn)
+
+
+class PallasBackend(ExecutionBackend):
+    """Real ``pallas_call`` (Mosaic on TPU): VMEM-resident event loops."""
+
+    name = "pallas"
+    _interpret = False
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, available=_on_tpu(), kind="pallas",
+            devices=_device_platforms(), max_p=1024,
+            # Pow2 static caps bound the set of programs Mosaic compiles.
+            max_events_pow2=True,
+            note="" if _on_tpu() else "needs a TPU; use 'pallas_interpret'")
+
+    def _run_batch(self, model, scn):
+        from repro.kernels.ws_sim import ws_sim_pallas
+        return ws_sim_pallas(model, scn, interpret=self._interpret)
+
+
+class PallasInterpretBackend(PallasBackend):
+    """The Pallas kernel in interpret mode: runs anywhere, CI-checkable."""
+
+    name = "pallas_interpret"
+    _interpret = True
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(
+            name=self.name, available=True, kind="pallas",
+            devices=_device_platforms(), max_p=1024, max_events_pow2=True,
+            note="interpret mode: validates kernel semantics, not kernel perf")
+
+
+_REGISTRY: Dict[str, ExecutionBackend] = {}
+
+
+def register_backend(backend: ExecutionBackend) -> ExecutionBackend:
+    """Add (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+for _b in (OracleBackend(), JaxBackend(), PallasBackend(),
+           PallasInterpretBackend()):
+    register_backend(_b)
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def available_backends() -> Tuple[ExecutionBackend, ...]:
+    return tuple(b for b in _REGISTRY.values() if b.capabilities().available)
+
+
+def default_backend_name() -> str:
+    """Auto-detected backend: ``REPRO_WS_BACKEND`` env override, else
+    ``pallas`` iff a TPU is attached, else ``jax``."""
+    env = os.environ.get(BACKEND_ENV, "").strip()
+    if env:
+        if env not in _REGISTRY:
+            raise ValueError(
+                f"{BACKEND_ENV}={env!r} is not a registered backend; "
+                f"choose one of {backend_names()}")
+        return env
+    return "pallas" if _on_tpu() else "jax"
+
+
+def get_backend(
+    backend: Union[None, str, ExecutionBackend] = None,
+) -> ExecutionBackend:
+    """Resolve a backend argument: None -> auto-detect, str -> registry
+    lookup, ExecutionBackend -> itself."""
+    if backend is None:
+        return _REGISTRY[default_backend_name()]
+    if isinstance(backend, ExecutionBackend):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; registered: "
+                         f"{backend_names()}") from None
+
+
+def pallas_interpret_default() -> bool:
+    """Default for ``ws_sim_pallas(interpret=)``: interpret everywhere
+    except on TPU hosts, overridable via ``REPRO_WS_BACKEND``
+    ('pallas' -> compiled, 'pallas_interpret' -> interpret)."""
+    env = os.environ.get(BACKEND_ENV, "").strip()
+    if env == "pallas":
+        return False
+    if env == "pallas_interpret":
+        return True
+    return not _on_tpu()

@@ -81,6 +81,11 @@ class Scenario(NamedTuple):
 
     Shared by every task model; ``W`` is the divisible/adaptive workload and
     is ignored by DAG scenarios (the DAG itself is static configuration).
+    ``max_events`` is a *per-scenario* event budget: the loop stops at
+    ``min(model.max_events, scn.max_events)`` events, so one compiled program
+    whose static cap was relaxed upward can still reproduce each row's
+    smaller-budget run bit-for-bit (the broker's cross-bucket coalescing —
+    DESIGN.md §7). ``INF32`` (the default) defers entirely to the model cap.
     """
     W: jnp.ndarray            # int32 total unit tasks
     seed: jnp.ndarray         # uint32 scenario seed
@@ -89,13 +94,16 @@ class Scenario(NamedTuple):
     theta_static: jnp.ndarray  # int32 steal-threshold constant
     theta_comm: jnp.ndarray    # int32 steal-threshold per unit of distance
     remote_prob: jnp.ndarray   # uint32 fixed-point P(remote) for LOCAL_FIRST
+    max_events: jnp.ndarray    # int32 per-row event budget (INF32: model cap)
 
 
 def make_scenario(W, seed, lam=1, lam_local=None, lam_remote=None,
-                  theta_static=0, theta_comm=0, remote_prob=0.25) -> Scenario:
+                  theta_static=0, theta_comm=0, remote_prob=0.25,
+                  max_events=None) -> Scenario:
     """Convenience constructor. ``lam`` sets both latencies (one-cluster use)."""
     ll = lam if lam_local is None else lam_local
     lr = lam if lam_remote is None else lam_remote
+    budget = INF32 if max_events is None else max_events
     return Scenario(
         W=jnp.asarray(W, jnp.int32),
         seed=jnp.asarray(seed, jnp.uint32),
@@ -104,6 +112,7 @@ def make_scenario(W, seed, lam=1, lam_local=None, lam_remote=None,
         theta_static=jnp.asarray(theta_static, jnp.int32),
         theta_comm=jnp.asarray(theta_comm, jnp.int32),
         remote_prob=jnp.asarray(topo_mod.remote_prob_u32(remote_prob), jnp.uint32),
+        max_events=jnp.asarray(budget, jnp.int32),
     )
 
 
@@ -125,6 +134,7 @@ def batch_scenarios(W, seeds, lam=1, **kw) -> Scenario:
         theta_static=bcast(base.theta_static, jnp.int32),
         theta_comm=bcast(base.theta_comm, jnp.int32),
         remote_prob=bcast(base.remote_prob, jnp.uint32),
+        max_events=bcast(base.max_events, jnp.int32),
     )
 
 
@@ -394,9 +404,17 @@ def _simulate_impl(model: TaskModel, cid, hops, arrays, scn: Scenario):
     handlers = [functools.partial(h, arrays, cid, hops, scn)
                 for h in (model.on_idle, model.on_request, model.on_answer)]
 
+    # Per-row event budget: the static model cap bounds the compiled loop,
+    # the (traced) scenario budget truncates it per row — a row dispatched
+    # under a relaxed static cap is bit-identical to a run whose static cap
+    # equals its budget, because lax.while_loop freezes each vmap lane at
+    # its own cond.
+    budget = jnp.minimum(jnp.int32(model.max_events),
+                         jnp.asarray(scn.max_events, jnp.int32))
+
     def cond(s):
         c = s[0]
-        return (~c.done) & (c.n_events < model.max_events) & (~c.halt)
+        return (~c.done) & (c.n_events < budget) & (~c.halt)
 
     def body(s):
         c, m = s

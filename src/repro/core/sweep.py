@@ -197,8 +197,15 @@ def canonical_grid(
     }
 
 
-def scenario_from_rows(rows: GridRows, remote_prob: float = 0.25) -> Scenario:
-    """Batched Scenario from canonical rows (λ sets both latency scalars)."""
+def scenario_from_rows(rows: GridRows, remote_prob: float = 0.25,
+                       ev_budget=None) -> Scenario:
+    """Batched Scenario from canonical rows (λ sets both latency scalars).
+
+    ``ev_budget`` (scalar or per-row array) fills the per-row event-budget
+    column; None defers every row to the model's static ``max_events`` cap.
+    """
+    n = len(rows)
+    budget = eng.INF32 if ev_budget is None else ev_budget
     return Scenario(
         W=jnp.asarray(rows.W),
         seed=jnp.asarray(rows.seed),
@@ -206,8 +213,10 @@ def scenario_from_rows(rows: GridRows, remote_prob: float = 0.25) -> Scenario:
         lam_remote=jnp.asarray(rows.lam_remote),
         theta_static=jnp.asarray(rows.theta_static),
         theta_comm=jnp.asarray(rows.theta_comm),
-        remote_prob=jnp.full((len(rows),),
+        remote_prob=jnp.full((n,),
                              np.uint32(remote_prob_u32(float(remote_prob)))),
+        max_events=jnp.broadcast_to(
+            jnp.asarray(budget, jnp.int32), (n,)),
     )
 
 
@@ -278,6 +287,7 @@ def resolve_model(
     mwt: bool = False,
     max_events: Optional[int] = None,
     pow2_max_events: bool = False,
+    backend=None,
     **model_kw,
 ) -> eng.TaskModel:
     """Grid-aware model construction shared by :func:`run_grid` and the
@@ -288,7 +298,24 @@ def resolve_model(
     so a larger cap costs nothing), but it is static model config — rounding
     it buckets near-identical queries onto one compiled model, which is what
     lets the service broker coalesce them into one dispatch.
+
+    ``backend`` (a name or :class:`~repro.core.backend.ExecutionBackend`)
+    validates the grid against the backend's capabilities up front (max p).
+    It deliberately does NOT alter the model: the resolved model — and
+    therefore every store/chunk key derived from its canonical form — must
+    be identical whichever backend will execute it, or cross-backend cache
+    sharing and chunked-sweep resume would silently break. Pow2 cap
+    bounding for compile-count control happens either explicitly
+    (``pow2_max_events``, as the service's ``make_query`` does) or at
+    dispatch time in the broker, where it is invisible to keys.
     """
+    if backend is not None:
+        from repro.core import backend as bk
+        caps = bk.get_backend(backend).capabilities()
+        if topo.p > caps.max_p:
+            raise ValueError(
+                f"backend {caps.name!r} supports p <= {caps.max_p}, "
+                f"got p={topo.p}")
     if not isinstance(task_model, str):
         model = as_model(task_model)
         if mwt or max_events is not None or model_kw:
@@ -314,14 +341,31 @@ def resolve_model(
 
 def run_rows(model: eng.TaskModel, rows: GridRows, remote_prob: float = 0.25,
              mesh: Optional[Mesh] = None,
-             shard_axes: Sequence[str] = ("data",)) -> GridResult:
-    """Run one batched simulation over canonical rows -> GridResult."""
-    scn = scenario_from_rows(rows, remote_prob=remote_prob)
+             shard_axes: Sequence[str] = ("data",),
+             backend=None, ev_budget=None) -> GridResult:
+    """Run one batched simulation over canonical rows -> GridResult.
+
+    ``backend`` selects the execution substrate (name, backend object, or
+    None for auto-detection — see ``repro.core.backend``); all backends are
+    bit-identical on the same rows. ``mesh`` shards the batch axis over a
+    JAX mesh and therefore requires the ``jax`` backend. ``ev_budget`` is a
+    per-row (or scalar) event budget truncating the loop below the model's
+    static cap (exact — see ``engine.Scenario.max_events``).
+    """
+    from repro.core import backend as bk
     if mesh is not None:
+        be = bk.get_backend("jax" if backend is None else backend)
+        if be.name != "jax":
+            raise ValueError(
+                f"mesh-sharded sweeps require the 'jax' backend, got "
+                f"{be.name!r}")
+        model = as_model(model)
+        scn = scenario_from_rows(rows, remote_prob=remote_prob,
+                                 ev_budget=ev_budget)
         res = simulate_sharded(model, scn, mesh, shard_axes)
-    else:
-        res = eng.simulate_batch(model, scn)
-    return grid_from_result(model.p, rows, res)
+        return grid_from_result(model.p, rows, res)
+    return bk.get_backend(backend).run_rows(
+        model, rows, remote_prob=remote_prob, ev_budget=ev_budget)
 
 
 def run_grid(
@@ -340,6 +384,7 @@ def run_grid(
     on_chunk: Optional[Callable[[int, GridResult], None]] = None,
     start_chunk: int = 0,
     chunk_lookup: Optional[Callable[[int], Optional[GridResult]]] = None,
+    backend=None,
     **model_kw,
 ) -> GridResult:
     """Simulate the full (W × λ × θ × reps) grid on topology ``topo``.
@@ -351,6 +396,10 @@ def run_grid(
     and the grid sweeps latency/threshold/rep only. A prebuilt model carries
     its own static config, so ``mwt``/``max_events``/``model_kw`` must be
     left at their defaults and its topology must equal ``topo``.
+
+    ``backend`` selects the execution substrate per :func:`run_rows`; all
+    backends produce bit-identical grids, so chunk persistence and resume
+    are backend-free.
 
     ``chunk_size`` splits the batch into fixed-size pieces executed one
     device-program at a time (bounds peak memory for huge grids) and makes
@@ -372,7 +421,8 @@ def run_grid(
             "grid is a single chunk 0 and the resume request would be "
             "silently ignored")
     model = resolve_model(topo, task_model, W_list=W_list, lam_list=lam_list,
-                          mwt=mwt, max_events=max_events, **model_kw)
+                          mwt=mwt, max_events=max_events, backend=backend,
+                          **model_kw)
     rows = grid_rows(W_list, lam_list, reps, theta, seed0=seed0)
 
     if chunk_size is None:
@@ -394,7 +444,8 @@ def run_grid(
                     "not match the chunk's rows (stale store entry?)")
             parts.append(g)
             continue
-        g = run_rows(model, rws, mesh=mesh, shard_axes=shard_axes)
+        g = run_rows(model, rws, mesh=mesh, shard_axes=shard_axes,
+                     backend=backend)
         if on_chunk is not None:
             on_chunk(ci, g)
         parts.append(g)
@@ -444,7 +495,7 @@ def lower_sharded_sweep(model, batch: int, mesh: Mesh,
         W=specs(jnp.int32), seed=specs(jnp.uint32),
         lam_local=specs(jnp.int32), lam_remote=specs(jnp.int32),
         theta_static=specs(jnp.int32), theta_comm=specs(jnp.int32),
-        remote_prob=specs(jnp.uint32),
+        remote_prob=specs(jnp.uint32), max_events=specs(jnp.int32),
     )
     fn = jax.jit(jax.vmap(lambda s: eng._simulate(model, s)))
     return fn.lower(scn)

@@ -50,5 +50,6 @@ def rms_norm(x, scale, *, eps=1e-6, block_rows=128, interpret=None):
 
 
 def ws_sim(cfg: dv.EngineConfig, scn: dv.Scenario, interpret=None):
-    interp = (not _on_tpu()) if interpret is None else interpret
-    return _ws.ws_sim_pallas(cfg, scn, interpret=interp)
+    # Default resolved by the backend registry (TPU detection + the
+    # REPRO_WS_BACKEND override), not a local _on_tpu() guess.
+    return _ws.ws_sim_pallas(cfg, scn, interpret=interpret)

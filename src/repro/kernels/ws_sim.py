@@ -22,12 +22,14 @@ argmin/compare/select vector ops over int32 lanes — all VPU-friendly).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import engine as eng
+from repro.core.backend import pallas_interpret_default
 from repro.core.sweep import as_model
 
 
@@ -43,14 +45,20 @@ def _kernel(*refs, model, n_const, n_scn, scn_def, bool_mask):
         ref[(0,) + (slice(None),) * leaf.ndim] = val
 
 
-def ws_sim_pallas(model, scn: eng.Scenario, interpret: bool = True):
+def ws_sim_pallas(model, scn: eng.Scenario, interpret: Optional[bool] = None):
     """Batched simulation; ``scn`` leaves have leading batch dim G.
 
     ``model`` is a TaskModel or any engine config (``EngineConfig`` /
     ``DagEngineConfig`` / ``AdaptiveEngineConfig``). Returns the model's
     result NamedTuple with a leading G axis on every leaf — bit-identical
     to ``engine.simulate_batch``.
+
+    ``interpret=None`` defers to the backend registry's auto-detection
+    (compiled via Mosaic on TPU hosts, interpret mode elsewhere;
+    ``REPRO_WS_BACKEND=pallas|pallas_interpret`` overrides).
     """
+    if interpret is None:
+        interpret = pallas_interpret_default()
     model = as_model(model)
     G = int(scn.W.shape[0])
 

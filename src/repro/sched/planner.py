@@ -79,9 +79,14 @@ def plan(
     mwt_opts: Tuple[bool, ...] = (False, True),
     seed0: int = 7,
     service: Optional[SimulationService] = None,
+    backend: Optional[str] = None,
 ) -> PlannerDecision:
     """Pick the policy minimizing median simulated makespan for a workload of
-    ``work_per_group × p`` units starting concentrated (the paper's W)."""
+    ``work_per_group × p`` units starting concentrated (the paper's W).
+
+    ``backend`` routes every sweep through a specific execution backend
+    (None auto-detects: Pallas on TPU hosts, jit/vmap elsewhere); picks are
+    backend-independent because backends are bit-identical."""
     svc = service if service is not None else default_service()
     W = work_per_group * topo.p
     lam_cell = (topo.lam_local, topo.lam_remote)
@@ -94,7 +99,8 @@ def plan(
         for rp in rps:
             queries.append(svc.make_query(
                 t, W_list=[W], lam_list=[lam_cell], theta=tuple(thetas),
-                reps=reps, seed0=seed0, remote_prob=rp, mwt=mwt))
+                reps=reps, seed0=seed0, remote_prob=rp, mwt=mwt,
+                backend=backend))
             combos.append((strat, mwt, rp))
 
     before = svc.n_dispatches
@@ -120,11 +126,12 @@ def plan(
     # one cell (the winning θ), replicated until the difference CI resolves.
     winner_q = svc.make_query(
         topo.with_strategy(strat), W_list=[W], lam_list=[lam_cell],
-        theta=((ts, tc),), seed0=seed0 + 1, remote_prob=rp, mwt=mwt)
+        theta=((ts, tc),), seed0=seed0 + 1, remote_prob=rp, mwt=mwt,
+        backend=backend)
     base_q = svc.make_query(
         topo.with_strategy(topo_mod.UNIFORM), W_list=[W],
         lam_list=[lam_cell], theta=((0, 0),), seed0=seed0 + 1,
-        remote_prob=0.25, mwt=False)
+        remote_prob=0.25, mwt=False, backend=backend)
     pres = svc.query_pair(winner_q, base_q, policy=PairedPolicy(
         batch_reps=max(reps // 2, 4), min_reps=max(reps // 2, 4),
         max_reps=max(16 * reps, 64)))
@@ -143,7 +150,8 @@ def plan_for_mesh(n_pods: int, chips_per_pod: int, *, ici_delay: int = 1,
                   dcn_delay: int = 40, work_per_group: int = 4096,
                   groups_per_pod: Optional[int] = None,
                   reps: int = 16,
-                  service: Optional[SimulationService] = None) -> PlannerDecision:
+                  service: Optional[SimulationService] = None,
+                  backend: Optional[str] = None) -> PlannerDecision:
     """Convenience: physical fleet -> topology -> policy.
 
     ``groups_per_pod`` defaults to chips_per_pod//8 (one group per 8-chip
@@ -151,4 +159,5 @@ def plan_for_mesh(n_pods: int, chips_per_pod: int, *, ici_delay: int = 1,
     """
     g = groups_per_pod or max(chips_per_pod // 8, 1)
     topo = tpu_fleet(n_pods, g, ici_delay=ici_delay, dcn_delay=dcn_delay)
-    return plan(topo, work_per_group, reps=reps, service=service)
+    return plan(topo, work_per_group, reps=reps, service=service,
+                backend=backend)

@@ -2,13 +2,16 @@
 Monte-Carlo estimation on top of the unified batched core (DESIGN.md §5).
 
 The simulator engine answers questions; this package serves them: repeated
-questions are cache hits forever (``store``, with size-based GC and a
-manifest for fleet-shared tiers), concurrent questions coalesce into shared
-device programs (``broker``), and every estimate carries a statistical
-guarantee — mean CIs, streaming P² quantile CIs, or paired
-common-random-numbers A/B verdicts — with replication driven by a precision
-target instead of a fixed rep count (``estimator``). ``api.SimulationService``
-is the facade callers use.
+questions are cache hits forever (``store``, with size-based GC, advisory
+per-key locks for cross-process in-flight dedup, and a manifest for
+fleet-shared tiers), concurrent questions coalesce into shared device
+programs — across ``max_events`` caps and onto any registered execution
+backend (``broker`` + ``repro.core.backend``: oracle / jax / pallas /
+pallas_interpret, all bit-identical, so cached answers are backend-free) —
+and every estimate carries a statistical guarantee — mean CIs, streaming P²
+quantile CIs, or paired common-random-numbers A/B verdicts — with
+replication driven by a precision target instead of a fixed rep count
+(``estimator``). ``api.SimulationService`` is the facade callers use.
 """
 from repro.service.api import SimulationService  # noqa: F401
 from repro.service.broker import (  # noqa: F401

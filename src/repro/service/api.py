@@ -37,11 +37,15 @@ class SimulationService:
     def __init__(self, store: Optional[ResultStore] = None,
                  root: Optional[os.PathLike] = None,
                  mesh=None, shard_axes: Sequence[str] = ("data",),
-                 confidence: float = 0.95, pad_pow2: bool = True):
+                 confidence: float = 0.95, pad_pow2: bool = True,
+                 relax_max_events: bool = True,
+                 lock_wait_s: Optional[float] = 60.0):
         self.store = store if store is not None else ResultStore(root=root)
         self.broker = QueryBroker(store=self.store, mesh=mesh,
                                   shard_axes=shard_axes,
-                                  confidence=confidence, pad_pow2=pad_pow2)
+                                  confidence=confidence, pad_pow2=pad_pow2,
+                                  relax_max_events=relax_max_events,
+                                  lock_wait_s=lock_wait_s)
         self.confidence = float(confidence)
 
     # -- query construction -------------------------------------------------
@@ -63,18 +67,21 @@ class SimulationService:
         max_reps: int = 1024,
         mwt: bool = False,
         max_events: Optional[int] = None,
+        backend: Optional[str] = None,
         **model_kw,
     ) -> SimQuery:
         """Build a SimQuery. ``ci`` switches on adaptive estimation: either a
         target CI half-width (absolute time units, or a fraction of the mean
         when ``ci_relative``), or a full :class:`AdaptivePolicy` /
         :class:`QuantilePolicy` (the latter replicates until the streaming
-        P² quantile CIs meet their target)."""
+        P² quantile CIs meet their target). ``backend`` selects the
+        execution substrate (None auto-detects from ``jax.devices()``; all
+        backends are bit-identical and share cached answers)."""
         lam_flat = [l for entry in lam_list for l in lam_pair(entry)]
         model = resolve_model(topology, task_model, W_list=W_list,
                               lam_list=lam_flat, mwt=mwt,
                               max_events=max_events, pow2_max_events=True,
-                              **model_kw)
+                              backend=backend, **model_kw)
         if isinstance(ci, (AdaptivePolicy, QuantilePolicy)):
             adaptive = ci
         elif ci is not None:
@@ -92,7 +99,8 @@ class SimulationService:
                 for l in lam_list),
             theta=tuple((int(a), int(b)) for a, b in theta),
             reps=int(reps), seed0=int(seed0),
-            remote_prob=float(remote_prob), adaptive=adaptive)
+            remote_prob=float(remote_prob), adaptive=adaptive,
+            backend=backend)
 
     # -- execution ----------------------------------------------------------
 
@@ -134,6 +142,7 @@ class SimulationService:
         chunk_size: int = 1024,
         mwt: bool = False,
         max_events: Optional[int] = None,
+        backend: Optional[str] = None,
         on_chunk: Optional[Callable[[int, GridResult], None]] = None,
         **model_kw,
     ) -> GridResult:
@@ -146,7 +155,8 @@ class SimulationService:
         lam_flat = [l for entry in lam_list for l in lam_pair(entry)]
         model = resolve_model(topology, task_model, W_list=W_list,
                               lam_list=lam_flat, mwt=mwt,
-                              max_events=max_events, **model_kw)
+                              max_events=max_events, backend=backend,
+                              **model_kw)
         grid = canonical_grid(W_list, lam_list, reps, theta=theta,
                               seed0=seed0)
         canon = store_mod.canonical_model(model)
@@ -165,7 +175,7 @@ class SimulationService:
         return run_grid(topology, W_list=W_list, lam_list=lam_list,
                         reps=reps, theta=theta, seed0=seed0,
                         task_model=model, chunk_size=chunk_size,
-                        on_chunk=persist,
+                        on_chunk=persist, backend=backend,
                         chunk_lookup=lambda ci: self.store.get(ckey(ci)))
 
     # -- introspection ------------------------------------------------------
@@ -175,8 +185,12 @@ class SimulationService:
         return self.broker.n_dispatches
 
     def stats(self) -> dict:
+        from repro.core.backend import default_backend_name
         return dict(store=self.store.stats(),
                     n_dispatches=self.broker.n_dispatches,
                     n_cache_hits=self.broker.n_cache_hits,
                     n_queries=self.broker.n_queries,
+                    n_lock_waits=self.broker.n_lock_waits,
+                    n_lock_served=self.broker.n_lock_served,
+                    default_backend=default_backend_name(),
                     engine_version=eng.ENGINE_VERSION)

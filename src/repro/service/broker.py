@@ -5,19 +5,34 @@ asks one per policy combination). Dispatching each as its own device program
 wastes the batched core. The broker instead:
 
 1. answers every query it can from the content-addressed store;
-2. groups the remaining queries into *buckets* of identical static
+2. takes a best-effort advisory file lock per remaining key (``<key>.lock``
+   in the store root, stale after a timeout): of N *processes* issuing the
+   identical query, one computes while the rest poll the store and serve
+   the freshly landed artifact — cross-process in-flight dedup on top of
+   the in-flush aliasing;
+3. groups the remaining queries into *buckets* of identical static
    configuration — the same canonical task-model config (topology, strategy,
-   MWT, caps) and the same ``remote_prob`` scalar — because only static
-   config forces a separate compiled program; everything else (W, λ, θ,
-   seed) is a traced per-row scenario field. Buckets are keyed by the
-   *canonical model form*, not object identity, so structurally identical
-   models built by different callers coalesce too;
-3. concatenates every bucket's pending rows into ONE batched sweep, padded
+   MWT, caps), the same ``remote_prob`` scalar and the same execution
+   *backend* — because only static config forces a separate compiled
+   program; everything else (W, λ, θ, seed) is a traced per-row scenario
+   field. Buckets are keyed by the *canonical model form*, not object
+   identity, so structurally identical models built by different callers
+   coalesce too. Under ``relax_max_events`` (the default) ``max_events`` is
+   dropped from the bucket key: members' static caps are *relaxed* to the
+   bucket's shared pow2 upper bound at dispatch, while each member's rows
+   carry their original cap as a per-row event budget
+   (``Scenario.max_events``) that truncates the loop in-engine — so every
+   row, overflow columns included, is bit-identical to its unrelaxed run
+   and stored results/keys stay byte-identical to the unrelaxed path;
+4. concatenates every bucket's pending rows into ONE batched sweep, padded
    to the next power of two (padding rows are W=1 scenarios, which
    terminate immediately; pow-2 padding bounds the number of distinct batch
-   shapes XLA ever compiles), and dispatches it through ``core/sweep``;
-4. fans the per-row results back to each query, rounds the adaptive
-   estimator, and persists each finished answer in the store.
+   shapes XLA ever compiles), and dispatches it through ``core/sweep`` on
+   the bucket's backend (``repro.core.backend``);
+5. fans the per-row results back to each query, rounds the adaptive
+   estimator, and persists each finished answer in the store. All backends
+   are bit-identical, so store keys carry no backend component: a fill
+   from any backend serves every other.
 
 Adaptive queries participate in the same rounds: round r of every pending
 query lands in the same bucket dispatch, so N concurrent adaptive queries
@@ -32,10 +47,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import backend as bk
 from repro.core import engine as eng
 from repro.core.sweep import (GridResult, GridRows, canonical_grid,
                               concat_grids, grid_rows, run_rows)
@@ -60,6 +77,12 @@ class SimQuery:
     :class:`AdaptivePolicy` (CI target on E[Cmax]) or a
     :class:`QuantilePolicy` (CI target on streaming quantiles) it is ignored
     and replication is driven by the statistical target instead.
+
+    ``backend`` names the execution substrate (``repro.core.backend``); None
+    auto-detects (env override, else ``pallas`` iff a TPU is attached, else
+    ``jax``). The backend is deliberately NOT part of :meth:`key`: all
+    backends are bit-identical, so a cached answer computed by any backend
+    serves every other.
     """
     model: eng.TaskModel
     W_list: Tuple[int, ...] = (0,)
@@ -69,6 +92,7 @@ class SimQuery:
     seed0: int = 1
     remote_prob: float = 0.25
     adaptive: Optional[StoppingPolicy] = None
+    backend: Optional[str] = None
 
     def grid_dict(self) -> dict:
         reps = self.adaptive.batch_reps if self.adaptive else self.reps
@@ -97,6 +121,8 @@ class PairedQuery:
     ``remote_prob`` may differ — that is the policy under test); their own
     ``adaptive`` must be None, because replication is driven by the pair's
     :class:`PairedPolicy` (or one fixed round of ``a.reps`` when None).
+    Each arm carries its own ``backend`` field (normally equal; they may
+    differ — backends are bit-identical, so the CRN pairing is unaffected).
     """
     a: SimQuery
     b: SimQuery
@@ -237,12 +263,14 @@ class _Pending:
         self._active_cells = inv[keep]
         return GridRows(*(np.asarray(a)[keep] for a in full))
 
-    def wants(self) -> List[Tuple[str, eng.TaskModel, dict, float, GridRows]]:
+    def wants(self) -> List[tuple]:
+        """(tag, model, canonical config, remote_prob, backend, rows) work
+        items this query wants simulated next round."""
         rows = self._next_rows()
         if rows is None:
             return []
         return [("solo", self.query.model, self.canon,
-                 self.query.remote_prob, rows)]
+                 self.query.remote_prob, self.query.backend, rows)]
 
     def feed_part(self, tag: str, grid: GridResult):
         self.parts.append(grid)
@@ -323,16 +351,16 @@ class _PairedPending:
         self._active_cells = inv[keep]
         return pq.policy.batch_reps, keep
 
-    def wants(self) -> List[Tuple[str, eng.TaskModel, dict, float, GridRows]]:
+    def wants(self) -> List[tuple]:
         nxt = self._next_keep()
         if nxt is None:
             return []
         reps, keep = nxt
         rows_a, rows_b = self._arm_rows(reps, self.round, keep)
         return [("a", self.pq.a.model, self.canon_a,
-                 self.pq.a.remote_prob, rows_a),
+                 self.pq.a.remote_prob, self.pq.a.backend, rows_a),
                 ("b", self.pq.b.model, self.canon_b,
-                 self.pq.b.remote_prob, rows_b)]
+                 self.pq.b.remote_prob, self.pq.b.backend, rows_b)]
 
     def feed_part(self, tag: str, grid: GridResult):
         self._fed[tag] = grid
@@ -412,35 +440,58 @@ def _next_pow2(n: int) -> int:
 
 class _Bucket:
     """One coalesced dispatch group: every member shares the same canonical
-    static config (and therefore the same compiled program)."""
+    static config (modulo ``max_events`` under relaxation), ``remote_prob``
+    and execution backend — and therefore the same compiled program."""
 
-    def __init__(self, model: eng.TaskModel, canon: dict, rp: float):
+    def __init__(self, model: eng.TaskModel, canon: dict, rp: float,
+                 backend: str):
         self.model = model       # dispatch vehicle (first member's object)
-        self.canon = canon
+        self.canon = canon       # bucket-key canonical form
         self.rp = rp
-        self.members: List[Tuple[int, str, GridRows]] = []
+        self.backend = backend
+        # (query idx, tag, rows, member's own static max_events cap)
+        self.members: List[Tuple[int, str, GridRows, int]] = []
 
 
 class QueryBroker:
     """Accepts concurrent SimQuerys/PairedQuerys, coalesces, dispatches,
-    fans back."""
+    fans back.
+
+    ``relax_max_events`` enables cross-bucket coalescing over the static
+    ``max_events`` cap (exact per-row budgets — see the module docstring);
+    ``lock_wait_s`` bounds how long a flush polls the store for a key whose
+    advisory lock another process holds (None disables locking entirely,
+    0 takes locks but never waits)."""
 
     def __init__(self, store: Optional[ResultStore] = None,
                  dispatch=None, pad_pow2: bool = True,
                  confidence: float = 0.95, mesh=None,
-                 shard_axes: Sequence[str] = ("data",)):
+                 shard_axes: Sequence[str] = ("data",),
+                 relax_max_events: bool = True,
+                 lock_wait_s: Optional[float] = 60.0,
+                 lock_poll_s: float = 0.05):
         self.store = store if store is not None else ResultStore()
         self.pad_pow2 = pad_pow2
         self.confidence = float(confidence)
+        self.relax_max_events = bool(relax_max_events)
+        self.lock_wait_s = lock_wait_s if lock_wait_s is None \
+            else float(lock_wait_s)
+        self.lock_poll_s = float(lock_poll_s)
+        # Mesh-sharded dispatch only exists on the jax backend, so a mesh
+        # pins the *default* (auto-detected) backend to jax; queries that
+        # explicitly name another backend still fail fast in run_rows.
+        self._mesh = mesh
         self._dispatch = dispatch or (
-            lambda model, rows, rp: run_rows(model, rows, remote_prob=rp,
-                                             mesh=mesh,
-                                             shard_axes=shard_axes))
+            lambda model, rows, rp, backend=None, ev_budget=None: run_rows(
+                model, rows, remote_prob=rp, mesh=mesh,
+                shard_axes=shard_axes, backend=backend, ev_budget=ev_budget))
         self._queue: List[Union[SimQuery, PairedQuery]] = []
         # Telemetry for the service_throughput bench / coalescing tests.
         self.n_dispatches = 0
         self.n_cache_hits = 0
         self.n_queries = 0
+        self.n_lock_waits = 0     # keys found locked by another process
+        self.n_lock_served = 0    # of those, answered by the other process
         self.dispatch_log: List[dict] = []
 
     def submit(self, query: Union[SimQuery, PairedQuery]) -> int:
@@ -460,6 +511,20 @@ class QueryBroker:
         return _paired_result(key, ga, gb, self.confidence,
                               from_cache=True, n_rounds=0)
 
+    def _from_cache(self, q, key: str):
+        if isinstance(q, PairedQuery):
+            return self._paired_from_cache(q, key)
+        grid = self.store.get(key)
+        if grid is None:
+            return None
+        return QueryResult(key=key, grid=grid,
+                           cells=summarize_cells(grid, self.confidence),
+                           from_cache=True, n_rounds=0)
+
+    def _make_pending(self, q):
+        return _PairedPending(q, self.confidence) if isinstance(
+            q, PairedQuery) else _Pending(q, self.confidence)
+
     def flush(self) -> List[Union[QueryResult, PairedResult]]:
         """Answer every queued query; one dispatch per (bucket, round)."""
         queue, self._queue = self._queue, []
@@ -469,35 +534,67 @@ class QueryBroker:
         key_owner: Dict[str, int] = {}   # identical questions share one run
         aliases: Dict[int, int] = {}
         keys = [q.key() for q in queue]
+        owned: set = set()               # advisory locks this flush holds
+        waiting: Dict[int, str] = {}     # keys locked by another process
 
         for i, (q, key) in enumerate(zip(queue, keys)):
-            if isinstance(q, PairedQuery):
-                cached = self._paired_from_cache(q, key)
-                if cached is not None:
-                    self.n_cache_hits += 1
-                    results[i] = cached
-                elif key in key_owner:
-                    aliases[i] = key_owner[key]
-                else:
-                    key_owner[key] = i
-                    pendings[i] = _PairedPending(q, self.confidence)
-                continue
-            grid = self.store.get(key)
-            if grid is not None:
+            cached = self._from_cache(q, key)
+            if cached is not None:
                 self.n_cache_hits += 1
-                results[i] = QueryResult(
-                    key=key, grid=grid,
-                    cells=summarize_cells(grid, self.confidence),
-                    from_cache=True, n_rounds=0)
+                results[i] = cached
             elif key in key_owner:
                 aliases[i] = key_owner[key]
             else:
                 key_owner[key] = i
-                pendings[i] = _Pending(q, self.confidence)
+                if self.lock_wait_s is not None \
+                        and not self.store.try_lock(key):
+                    waiting[i] = key     # someone else is computing this key
+                    self.n_lock_waits += 1
+                else:
+                    if self.lock_wait_s is not None:
+                        owned.add(key)
+                    pendings[i] = self._make_pending(q)
 
+        # Cross-process in-flight dedup: poll the store for locked keys
+        # until the other process's answer lands (or its lock frees/goes
+        # stale — then we take over), bounded by lock_wait_s. Best-effort:
+        # on timeout we compute anyway; correctness never needs the lock.
+        if waiting:
+            deadline = time.monotonic() + self.lock_wait_s
+            while waiting:
+                for i in list(waiting):
+                    key = waiting[i]
+                    cached = self._from_cache(queue[i], key)
+                    if cached is not None:
+                        self.n_cache_hits += 1
+                        self.n_lock_served += 1
+                        results[i] = cached
+                        del waiting[i]
+                    elif self.store.try_lock(key):
+                        owned.add(key)
+                        pendings[i] = self._make_pending(queue[i])
+                        del waiting[i]
+                if not waiting or time.monotonic() >= deadline:
+                    break
+                time.sleep(self.lock_poll_s)
+            for i in waiting:            # wait budget spent: just compute
+                pendings[i] = self._make_pending(queue[i])
+
+        try:
+            self._run_pendings(queue, keys, results, pendings, owned)
+        finally:
+            for key in owned:
+                self.store.unlock(key)
+
+        for i, owner in aliases.items():
+            src = results[owner]
+            results[i] = dataclasses.replace(src, from_cache=True)
+        return results
+
+    def _run_pendings(self, queue, keys, results, pendings, owned):
         while True:
-            # canonical static config -> coalesced dispatch group
-            buckets: Dict[Tuple[str, int], _Bucket] = {}
+            # (canonical static config, rp, backend) -> coalesced dispatch
+            buckets: Dict[Tuple[str, int, str], _Bucket] = {}
             for i, pend in pendings.items():
                 if results[i] is not None:
                     continue
@@ -505,41 +602,79 @@ class QueryBroker:
                 if not wants:
                     results[i] = pend.result(keys[i])
                     pend.persist(self.store, keys[i])
+                    if keys[i] in owned:
+                        self.store.unlock(keys[i])
+                        owned.discard(keys[i])
                     continue
-                for tag, model, canon, rp, rows in wants:
-                    bkey = (json.dumps(canon, sort_keys=True,
+                for tag, model, canon, rp, backend, rows in wants:
+                    bname = backend or (
+                        "jax" if self._mesh is not None
+                        else bk.default_backend_name())
+                    if self.relax_max_events:
+                        # Drop the static cap from the bucket identity:
+                        # members coalesce across max_events and the
+                        # dispatch cap is relaxed to a shared pow2 bound.
+                        canon_b = {k: v for k, v in canon.items()
+                                   if k != "max_events"}
+                    else:
+                        canon_b = canon
+                    bkey = (json.dumps(canon_b, sort_keys=True,
                                        separators=(",", ":")),
-                            remote_prob_u32(float(rp)))
+                            remote_prob_u32(float(rp)), bname)
                     bucket = buckets.get(bkey)
                     if bucket is None:
-                        bucket = buckets[bkey] = _Bucket(model, canon, rp)
+                        bucket = buckets[bkey] = _Bucket(model, canon_b, rp,
+                                                         bname)
                     else:
-                        assert bucket.canon == canon, (
+                        assert bucket.canon == canon_b, (
                             "bucket members' canonical model configs "
                             "disagree despite equal bucket keys")
-                    bucket.members.append((i, tag, rows))
+                    bucket.members.append((i, tag, rows,
+                                           int(model.max_events)))
             if not buckets:
-                break
+                return
             for bucket in buckets.values():
-                rows = _concat_rows([r for _, _, r in bucket.members])
-                n = len(rows)
-                padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 \
-                    else rows
-                grid = self._dispatch(bucket.model, padded, bucket.rp)
-                self.n_dispatches += 1
-                self.dispatch_log.append(dict(
-                    n_queries=len(bucket.members), n_rows=n,
-                    n_padded=len(padded)))
-                off = 0
-                for i, tag, rws in bucket.members:
-                    part = _slice_grid(grid, off, off + len(rws))
-                    pendings[i].feed_part(tag, part)
-                    off += len(rws)
+                self._dispatch_bucket(bucket, pendings)
 
-        for i, owner in aliases.items():
-            src = results[owner]
-            results[i] = dataclasses.replace(src, from_cache=True)
-        return results
+    def _dispatch_bucket(self, bucket: _Bucket, pendings):
+        rows = _concat_rows([r for _, _, r, _ in bucket.members])
+        n = len(rows)
+        caps = [c for _, _, _, c in bucket.members]
+        model = bucket.model
+        if self.relax_max_events:
+            # Relax the static cap to the bucket's shared pow2 upper bound;
+            # every member's rows keep their own cap as an in-engine per-row
+            # event budget, so results (overflow columns included) are
+            # bit-identical to the member's unrelaxed dispatch. Clamped to
+            # INT32_MAX: a pow2-ceil of a near-limit cap must not wrap the
+            # engine's int32 event counter.
+            cap = min(_next_pow2(max(caps)), int(eng.INF32))
+            if cap != model.max_events:
+                model = dataclasses.replace(
+                    model, cfg=dataclasses.replace(model.cfg,
+                                                   max_events=cap))
+            budgets = np.concatenate(
+                [np.full(len(r), c, np.int32)
+                 for _, _, r, c in bucket.members])
+        else:
+            cap = int(model.max_events)
+            budgets = None
+        padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 else rows
+        if budgets is not None and len(padded) > n:
+            budgets = np.concatenate(
+                [budgets, np.full(len(padded) - n, eng.INF32, np.int32)])
+        grid = self._dispatch(model, padded, bucket.rp,
+                              backend=bucket.backend, ev_budget=budgets)
+        self.n_dispatches += 1
+        self.dispatch_log.append(dict(
+            n_queries=len(bucket.members), n_rows=n, n_padded=len(padded),
+            backend=bucket.backend, max_events=cap,
+            relaxed=bool(self.relax_max_events and len(set(caps)) > 1)))
+        off = 0
+        for i, tag, rws, _ in bucket.members:
+            part = _slice_grid(grid, off, off + len(rws))
+            pendings[i].feed_part(tag, part)
+            off += len(rws)
 
 
 def _slice_grid(grid: GridResult, lo: int, hi: int) -> GridResult:

@@ -155,10 +155,12 @@ class ResultStore:
 
     def __init__(self, root: Optional[os.PathLike] = None,
                  lru_capacity: int = 128,
-                 gc_bytes: Optional[int] = None):
+                 gc_bytes: Optional[int] = None,
+                 lock_stale_s: float = 300.0):
         self.root = Path(root) if root is not None else DEFAULT_ROOT
         self.lru_capacity = int(lru_capacity)
         self.gc_bytes = None if gc_bytes is None else int(gc_bytes)
+        self.lock_stale_s = float(lock_stale_s)
         self._lru: "OrderedDict[str, GridResult]" = OrderedDict()
         self.hits_mem = 0
         self.hits_disk = 0
@@ -260,6 +262,66 @@ class ResultStore:
     def contains(self, key: str) -> bool:
         return key in self._lru or self._path(key).exists()
 
+    # -- advisory key locks (cross-process in-flight dedup) ------------------
+
+    def _lock_path(self, key: str) -> Path:
+        return self.root / f"{key}.lock"
+
+    def try_lock(self, key: str) -> bool:
+        """Best-effort advisory lock on a key: True iff this process now
+        holds it. ``O_CREAT | O_EXCL`` is atomic on POSIX (incl. NFSv3+ for
+        regular files), so of N processes about to compute the same key,
+        one wins and the rest poll the store instead (see the broker's
+        flush). A lock older than ``lock_stale_s`` is wreckage from a dead
+        writer and is broken. Purely an optimization: correctness never
+        depends on the lock — a process that cannot get it may still
+        compute (the store write is atomic and idempotent)."""
+        self.root.mkdir(parents=True, exist_ok=True)
+        path = self._lock_path(key)
+        for attempt in range(2):      # second pass after breaking a stale lock
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = time.time() - path.stat().st_mtime
+                except OSError:
+                    continue          # holder just released it; retry
+                if age < self.lock_stale_s:
+                    return False
+                # Stale: break it by atomic rename-away, not unlink — of N
+                # waiters observing the same stale file exactly one rename
+                # succeeds, so no waiter can ever delete a *fresh* lock
+                # another waiter just created in its place.
+                wreck = path.with_suffix(f".lock-stale.{os.getpid()}.tmp")
+                try:
+                    os.rename(path, wreck)
+                except OSError:
+                    pass              # another waiter broke it first
+                else:
+                    try:
+                        os.unlink(wreck)
+                    except OSError:
+                        pass
+                continue
+            with os.fdopen(fd, "w") as f:
+                f.write(f"{os.getpid()} {time.time():.3f}")
+            return True
+        return False
+
+    def unlock(self, key: str):
+        try:
+            os.unlink(self._lock_path(key))
+        except OSError:
+            pass
+
+    def lock_held(self, key: str) -> bool:
+        """A *fresh* lock file exists (some live process is computing)."""
+        try:
+            age = time.time() - self._lock_path(key).stat().st_mtime
+        except OSError:
+            return False
+        return age < self.lock_stale_s
+
     def clear_memory(self):
         """Drop the in-process tier (the disk tier keeps serving)."""
         self._lru.clear()
@@ -299,15 +361,17 @@ class ResultStore:
     _TMP_STALE_S = 3600.0
 
     def _junk_entries(self) -> list:
-        """(path, bytes) of quarantined ``.corrupt`` files and stale ``.tmp``
-        wreckage — junk that must count against the byte budget (it lives in
-        the tier) and that GC deletes before touching real artifacts."""
+        """(path, bytes) of quarantined ``.corrupt`` files, stale ``.tmp``
+        wreckage and stale ``.lock`` files — junk that must count against
+        the byte budget (it lives in the tier) and that GC deletes before
+        touching real artifacts."""
         out = []
         if not self.root.is_dir():
             return out
         now = time.time()
         for pattern, min_age in (("*.corrupt", 0.0),
-                                 ("*.tmp", self._TMP_STALE_S)):
+                                 ("*.tmp", self._TMP_STALE_S),
+                                 ("*.lock", self.lock_stale_s)):
             for path in self.root.glob(pattern):
                 try:
                     st = path.stat()
