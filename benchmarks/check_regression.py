@@ -1,0 +1,80 @@
+"""Bench-regression guard: compare a fresh ``backend_matrix`` run against a
+baseline ``BENCH_backends.json``.
+
+Usage::
+
+    python benchmarks/check_regression.py BASELINE.json NEW.json \
+        [--threshold 0.2] [--strict]
+
+Backends present and available in both files are compared on ``rows_per_s``;
+a drop of more than ``--threshold`` (default 20%) prints a warning (as a
+GitHub Actions ``::warning::`` annotation when running in CI). Exit status
+is 0 unless ``--strict`` is given and a regression was found — the CI step
+is deliberately non-blocking: CPU runners are noisy, and the committed
+baseline may come from different hardware. The point is a visible trajectory,
+not a gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def compare(baseline: dict, new: dict, threshold: float) -> list:
+    """Return [(backend, old_rows_per_s, new_rows_per_s, ratio), ...] for
+    every backend regressing by more than ``threshold``."""
+    old_by = {b["backend"]: b for b in baseline.get("backends", [])
+              if b.get("available")}
+    new_by = {b["backend"]: b for b in new.get("backends", [])
+              if b.get("available")}
+    regressions = []
+    for name in sorted(set(old_by) & set(new_by)):
+        old_rps = float(old_by[name].get("rows_per_s") or 0.0)
+        new_rps = float(new_by[name].get("rows_per_s") or 0.0)
+        if old_rps <= 0.0:
+            continue
+        ratio = new_rps / old_rps
+        if ratio < 1.0 - threshold:
+            regressions.append((name, old_rps, new_rps, ratio))
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("new", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative rows/s drop that counts as a regression")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regression (default: warn only)")
+    args = ap.parse_args(argv)
+
+    for path in (args.baseline, args.new):
+        if not path.exists():
+            print(f"check_regression: {path} missing; nothing to compare")
+            return 0
+    baseline = json.loads(args.baseline.read_text())
+    new = json.loads(args.new.read_text())
+
+    regressions = compare(baseline, new, args.threshold)
+    warn = "::warning::" if os.environ.get("GITHUB_ACTIONS") else "WARNING: "
+    for name, old_rps, new_rps, ratio in regressions:
+        print(f"{warn}backend {name!r} rows/s regressed "
+              f"{old_rps:,.1f} -> {new_rps:,.1f} ({ratio:.0%} of baseline, "
+              f"threshold {1 - args.threshold:.0%})")
+    compared = sorted(
+        {b['backend'] for b in baseline.get('backends', [])
+         if b.get('available')}
+        & {b['backend'] for b in new.get('backends', [])
+           if b.get('available')})
+    if not regressions:
+        print(f"check_regression: no rows/s regression > "
+              f"{args.threshold:.0%} across {compared}")
+    return 1 if (regressions and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

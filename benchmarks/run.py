@@ -405,24 +405,36 @@ def paired_comparison(reps: int):
 
 
 def backend_matrix(reps: int):
-    """One grid, every available execution backend: throughput + parity.
+    """One grid, every available execution backend: throughput + parity +
+    wasted-lane accounting.
 
     The parity column asserts the backend contract (bit-identical rows on
     every backend — what makes the store's keys backend-free); the rows/s
-    column starts the cross-substrate perf trajectory (BENCH_backends.json
-    is uploaded per commit by the extended CI job)."""
+    column is the cross-substrate perf trajectory (BENCH_backends.json is
+    uploaded per commit by the extended CI job, and guarded against
+    regression by benchmarks/check_regression.py). The λ spread makes the
+    per-row event counts heavy-tailed, so ``wasted_frac_convoy`` — the
+    fraction of lane-iterations a single monolithic vmap batch burns on
+    already-finished rows, ``1 − sum(events)/(n_rows × max(events))`` — is
+    high; the jax backend's ``wasted_frac_actual`` shows how much of that
+    the segmented driver's compaction recovers. ``pallas_interpret`` is
+    ~1000× slower than compiled paths, so it runs (and parity-checks) a
+    small row slice only."""
     from repro.core import engine as eng
     from repro.core.backend import (backend_names, default_backend_name,
                                     get_backend)
     from repro.core.sweep import grid_rows, resolve_model, run_rows
 
-    p, W, lams = 16, 30_000, (2, 10)
-    n_reps = min(max(reps // 4, 2), 6)      # oracle is a python loop
+    p, W, lams = 16, 30_000, (2, 6, 20)
+    n_reps = max(reps + 6, 22)    # >= 66 rows: the convoy regime (batch >= 64)
     topo = one_cluster(p, 1)
     rows = grid_rows([W], lams, n_reps)
     model = resolve_model(topo, "divisible", W_list=[W], lam_list=lams,
                           pow2_max_events=True)
-    ref = run_rows(model, rows, backend="jax")
+    ref = run_rows(model, rows, backend="jax", reroute=False)
+    ev = np.asarray(ref.extras["n_events"], np.float64)
+    convoy = 1.0 - ev.sum() / (len(rows) * ev.max())
+    interp_n = min(8, len(rows))
     out = []
     for name in backend_names():
         be = get_backend(name)
@@ -430,38 +442,61 @@ def backend_matrix(reps: int):
         if not caps.available:
             out.append(dict(backend=name, available=False, note=caps.note))
             continue
-        run = lambda: run_rows(model, rows, backend=name)
+        rows_b = rows.slice(0, interp_n) if name == "pallas_interpret" \
+            else rows
+        nb = len(rows_b)
+        run = lambda: run_rows(model, rows_b, backend=name, reroute=False)
         run()                                # compile + warm
         t0 = time.time()
         g = run()
         dt = max(time.time() - t0, 1e-9)
         parity = all(
             np.array_equal(np.asarray(getattr(g, f)),
-                           np.asarray(getattr(ref, f)))
+                           np.asarray(getattr(ref, f))[:nb])
             for f in ("makespan", "n_requests", "n_success", "n_fail",
                       "total_idle", "startup_end", "overflow")) \
-            and np.array_equal(g.extras["executed"], ref.extras["executed"])
-        out.append(dict(
+            and np.array_equal(g.extras["executed"],
+                               ref.extras["executed"][:nb])
+        rec = dict(
             backend=name, available=True, kind=caps.kind,
-            devices="+".join(caps.devices), n_rows=len(rows),
-            rows_per_s=round(len(rows) / dt, 2),
+            devices="+".join(caps.devices), n_rows=nb,
+            n_devices=caps.n_devices,
+            rows_per_s=round(nb / dt, 2),
             events_per_s=round(float(g.extras["n_events"].sum()) / dt, 1),
-            us_per_row=round(dt * 1e6 / len(rows), 1),
-            parity_vs_jax=bool(parity)))
+            us_per_row=round(dt * 1e6 / nb, 1),
+            wasted_frac_convoy=round(convoy, 4),
+            parity_vs_jax=bool(parity))
+        if name == "jax" and be.last_stats is not None:
+            st = be.last_stats
+            rec.update(wasted_frac_actual=round(st.wasted_frac, 4),
+                       n_segments=st.n_segments,
+                       n_compactions=st.n_compactions,
+                       segment_len=caps.segment_len)
+        out.append(rec)
     _write_csv("backend_matrix", out)
     BENCH.mkdir(parents=True, exist_ok=True)
     with open(BENCH / "BENCH_backends.json", "w") as f:
         json.dump({"engine_version": eng.ENGINE_VERSION,
                    "default_backend": default_backend_name(),
-                   "grid": dict(p=p, W=W, lams=list(lams), reps=n_reps),
+                   "grid": dict(p=p, W=W, lams=list(lams), reps=n_reps,
+                                n_rows=len(rows)),
                    "backends": out}, f, indent=1, sort_keys=True)
     ran = [r for r in out if r.get("available")]
     bad = [r["backend"] for r in ran if not r["parity_vs_jax"]]
     fastest = max(ran, key=lambda r: r["rows_per_s"])
+    by_name = {r["backend"]: r for r in ran}
+    vs = ""
+    if "jax" in by_name and "oracle" in by_name:
+        ratio = by_name["jax"]["rows_per_s"] / by_name["oracle"]["rows_per_s"]
+        vs = f"; jax x{ratio:.2f} vs oracle at batch {len(rows)}"
+        jr = by_name["jax"]
+        if "wasted_frac_actual" in jr:
+            vs += (f" (lanes wasted {jr['wasted_frac_actual']:.0%} vs "
+                   f"{jr['wasted_frac_convoy']:.0%} convoy)")
     _row("backend_matrix", fastest["us_per_row"],
          f"{len(ran)}/{len(out)} backends available; parity "
          f"{'OK' if not bad else 'FAIL ' + ','.join(bad)}; fastest "
-         f"{fastest['backend']} at {fastest['rows_per_s']:,.0f} rows/s")
+         f"{fastest['backend']} at {fastest['rows_per_s']:,.0f} rows/s{vs}")
 
 
 def roofline(_reps: int):

@@ -15,11 +15,16 @@ from repro.core.divisible import (  # noqa: F401
     DivisibleModel, EngineConfig, Scenario, SimResult, make_scenario,
     simulate, simulate_batch, default_max_events,
 )
+from repro.core.engine import (  # noqa: F401
+    SegmentStats, SegmentedRun, default_segment_len, simulate_segmented,
+)
 from repro.core.sweep import (  # noqa: F401
-    run_grid, quick_sim, GridResult, simulate_sharded, make_model, as_model,
+    run_grid, run_rows, quick_sim, GridResult, simulate_sharded, make_model,
+    as_model,
 )
 from repro.core.backend import (  # noqa: F401
     BackendCapabilities, ExecutionBackend, available_backends, backend_names,
-    default_backend_name, get_backend, register_backend,
+    default_backend_name, enable_compile_cache, get_backend,
+    register_backend,
 )
 from repro.core import analysis  # noqa: F401

@@ -29,7 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Optional, Tuple, Union
+from pathlib import Path
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -45,6 +46,14 @@ from repro.core import divisible as dv
 #: Pallas wrapper's interpret default (:func:`pallas_interpret_default`).
 BACKEND_ENV = "REPRO_WS_BACKEND"
 
+#: Segment length override for the jax backend's segmented driver:
+#: a positive int forces that segment length, "0" disables segmentation.
+SEG_LEN_ENV = "REPRO_WS_SEG_LEN"
+
+#: Opt-in path for JAX's persistent compilation cache
+#: (:func:`enable_compile_cache`).
+JIT_CACHE_ENV = "REPRO_WS_JIT_CACHE"
+
 
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
@@ -56,6 +65,9 @@ class BackendCapabilities:
     max_p: int                # largest processor count supported
     max_events_pow2: bool     # dispatcher should round static caps to pow2
     note: str = ""
+    n_devices: int = 1        # local devices run_rows shards rows across
+    crossover_rows: int = 0   # below this batch size, cheaper to reroute
+    segment_len: Optional[int] = None  # preferred event-segment length
 
 
 class ExecutionBackend:
@@ -64,15 +76,32 @@ class ExecutionBackend:
     Subclasses implement :meth:`_run_batch` (model + batched Scenario ->
     the model's result NamedTuple with a leading batch axis) and
     :meth:`capabilities`; :meth:`run_rows` is the shared entry point used by
-    ``sweep.run_rows`` and the service broker.
+    ``sweep.run_rows`` and the service broker. ``run_rows`` shards row
+    chunks across every local device by default (``devices=`` narrows the
+    set); chunk dispatches are issued back-to-back before any result is
+    pulled to the host, so devices compute concurrently.
     """
 
     name = "?"
+    #: a device chunk smaller than this is not worth a separate dispatch
+    min_rows_per_device = 8
+
+    def __init__(self):
+        self.n_run_rows = 0     # dispatch counter (test/bench telemetry)
+        self.last_stats = None  # SegmentStats of the last segmented run
 
     def capabilities(self) -> BackendCapabilities:
         raise NotImplementedError
 
-    def _run_batch(self, model: eng.TaskModel, scn: eng.Scenario):
+    def local_devices(self) -> tuple:
+        """Devices this backend shards row chunks across (may be empty)."""
+        try:
+            return tuple(jax.local_devices())
+        except RuntimeError:
+            return ()
+
+    def _run_batch(self, model: eng.TaskModel, scn: eng.Scenario,
+                   device=None):
         raise NotImplementedError
 
     def _check(self, model: eng.TaskModel):
@@ -86,20 +115,54 @@ class ExecutionBackend:
                 f"backend {self.name!r} supports p <= {caps.max_p}, "
                 f"got p={model.p}")
 
+    def _device_chunks(self, n: int, devices: Optional[Sequence]):
+        """Contiguous balanced (lo, hi, device) row chunks, one per device
+        actually worth dispatching to."""
+        devs = tuple(devices) if devices is not None else self.local_devices()
+        if not devs:
+            return [(0, n, None)]
+        nd = max(1, min(len(devs), n // max(self.min_rows_per_device, 1)))
+        bounds = np.linspace(0, n, nd + 1).astype(int)
+        return [(int(lo), int(hi), devs[k])
+                for k, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:]))
+                if hi > lo]
+
     def run_rows(self, model, rows: "sw.GridRows", remote_prob: float = 0.25,
-                 ev_budget=None) -> "sw.GridResult":
+                 ev_budget=None, devices: Optional[Sequence] = None,
+                 ) -> "sw.GridResult":
         """Run one batched simulation over canonical rows.
 
         ``ev_budget`` is an optional per-row (or scalar) event budget; rows
         behave exactly as if the model's static ``max_events`` were their
-        budget (see ``engine.Scenario.max_events``).
+        budget (see ``engine.Scenario.max_events``). ``devices`` narrows the
+        device set row chunks are sharded across (default: every local
+        device the backend can use).
         """
         model = sw.as_model(model)
         self._check(model)
-        scn = sw.scenario_from_rows(rows, remote_prob=remote_prob,
-                                    ev_budget=ev_budget)
-        res = self._run_batch(model, scn)
-        return sw.grid_from_result(model.p, rows, res)
+        self.n_run_rows += 1
+        return self._run_rows(model, rows, remote_prob, ev_budget, devices)
+
+    def _run_rows(self, model, rows, remote_prob, ev_budget, devices):
+        n = len(rows)
+        chunks = self._device_chunks(n, devices)
+        if len(chunks) <= 1:
+            dev = chunks[0][2] if chunks else None
+            scn = sw.scenario_from_rows(rows, remote_prob=remote_prob,
+                                        ev_budget=ev_budget)
+            res = self._run_batch(model, scn, device=dev)
+            return sw.grid_from_result(model.p, rows, res)
+        budgets = None if ev_budget is None else np.broadcast_to(
+            np.asarray(ev_budget, np.int64), (n,))
+        outs = []
+        for lo, hi, dev in chunks:  # dispatch everything before any sync
+            scn = sw.scenario_from_rows(
+                rows.slice(lo, hi), remote_prob=remote_prob,
+                ev_budget=None if budgets is None else budgets[lo:hi])
+            outs.append(self._run_batch(model, scn, device=dev))
+        return sw.concat_grids(
+            [sw.grid_from_result(model.p, rows.slice(lo, hi), res)
+             for (lo, hi, _), res in zip(chunks, outs)])
 
 
 def _device_platforms() -> Tuple[str, ...]:
@@ -130,10 +193,14 @@ class OracleBackend(ExecutionBackend):
             devices=("cpu",), max_p=256, max_events_pow2=False,
             note="serial python loop; no capacity-halt or trace modelling")
 
+    def local_devices(self) -> tuple:
+        return ()  # pure numpy: no device sharding
+
     def run_rows(self, model, rows, remote_prob: float = 0.25,
-                 ev_budget=None) -> "sw.GridResult":
+                 ev_budget=None, devices=None) -> "sw.GridResult":
         model = sw.as_model(model)
         self._check(model)
+        self.n_run_rows += 1
         if model.log_trace:
             raise ValueError("oracle backend does not record traces; "
                              "use the 'jax' backend for log_trace models")
@@ -209,18 +276,67 @@ class OracleBackend(ExecutionBackend):
 
 
 class JaxBackend(ExecutionBackend):
-    """The jit/vmap engine — the current (and CPU/GPU default) path."""
+    """The jit/vmap engine — the current (and CPU/GPU default) path.
+
+    Batches at or above :attr:`seg_min_rows` run through the segmented
+    driver (``engine.simulate_segmented``): the event loop is cut into
+    fixed-size segments with host-side active-lane compaction in between,
+    so a batch costs ~``sum(events)`` instead of ``n_rows x max(events)``
+    (bit-identical results — see DESIGN.md §8). ``REPRO_WS_SEG_LEN``
+    overrides the segment length (0 disables segmentation entirely);
+    :attr:`last_stats` carries the wasted-lane telemetry of the most recent
+    segmented dispatch.
+    """
 
     name = "jax"
+    #: below this batch width, segmentation overhead beats its convoy savings
+    seg_min_rows = 32
 
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
             name=self.name, available=True, kind="xla",
             devices=_device_platforms(), max_p=1 << 14,
-            max_events_pow2=False)
+            max_events_pow2=False,
+            n_devices=max(len(self.local_devices()), 1),
+            crossover_rows=8,
+            segment_len=eng.default_segment_len(1 << 20))
 
-    def _run_batch(self, model, scn):
+    def _segment_len(self, model, ev_budget, n: int) -> Optional[int]:
+        env = os.environ.get(SEG_LEN_ENV, "").strip()
+        if env:
+            v = int(env)
+            return v if v > 0 else None
+        if n < self.seg_min_rows:
+            return None
+        return eng.default_segment_len(model.max_events, ev_budget)
+
+    def _run_batch(self, model, scn, device=None):
+        if device is not None:
+            scn = jax.device_put(scn, device)
         return eng.simulate_batch(model, scn)
+
+    def _run_rows(self, model, rows, remote_prob, ev_budget, devices):
+        n = len(rows)
+        seg_len = self._segment_len(model, ev_budget, n)
+        if seg_len is None or n == 0:
+            return super()._run_rows(model, rows, remote_prob, ev_budget,
+                                     devices)
+        chunks = self._device_chunks(n, devices)
+        budgets = None if ev_budget is None else np.broadcast_to(
+            np.asarray(ev_budget, np.int64), (n,))
+        scns = [sw.scenario_from_rows(
+                    rows.slice(lo, hi), remote_prob=remote_prob,
+                    ev_budget=None if budgets is None else budgets[lo:hi])
+                for lo, hi, _ in chunks]
+        results, stats = eng.run_segmented_chunks(
+            model, scns, [d for _, _, d in chunks], seg_len=seg_len)
+        merged = stats[0]
+        for s in stats[1:]:
+            merged = merged.merge(s)
+        self.last_stats = merged
+        return sw.concat_grids(
+            [sw.grid_from_result(model.p, rows.slice(lo, hi), res)
+             for (lo, hi, _), res in zip(chunks, results)])
 
 
 class PallasBackend(ExecutionBackend):
@@ -228,6 +344,9 @@ class PallasBackend(ExecutionBackend):
 
     name = "pallas"
     _interpret = False
+    #: fixed grid-chunk width: bounds the set of program shapes Mosaic
+    #: compiles and gives the multi-device path per-chunk dispatches
+    grid_chunk = 128
 
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
@@ -235,11 +354,23 @@ class PallasBackend(ExecutionBackend):
             devices=_device_platforms(), max_p=1024,
             # Pow2 static caps bound the set of programs Mosaic compiles.
             max_events_pow2=True,
-            note="" if _on_tpu() else "needs a TPU; use 'pallas_interpret'")
+            note="" if _on_tpu() else "needs a TPU; use 'pallas_interpret'",
+            n_devices=max(len(self.local_devices()), 1),
+            crossover_rows=16)
 
-    def _run_batch(self, model, scn):
+    def local_devices(self) -> tuple:
+        try:
+            return tuple(d for d in jax.local_devices()
+                         if d.platform == "tpu")
+        except RuntimeError:
+            return ()
+
+    def _run_batch(self, model, scn, device=None):
         from repro.kernels.ws_sim import ws_sim_pallas
-        return ws_sim_pallas(model, scn, interpret=self._interpret)
+        if device is not None:
+            scn = jax.device_put(scn, device)
+        return ws_sim_pallas(model, scn, interpret=self._interpret,
+                             grid_chunk=self.grid_chunk)
 
 
 class PallasInterpretBackend(PallasBackend):
@@ -247,12 +378,16 @@ class PallasInterpretBackend(PallasBackend):
 
     name = "pallas_interpret"
     _interpret = True
+    grid_chunk = None  # interpret mode gains nothing from chunking
 
     def capabilities(self) -> BackendCapabilities:
         return BackendCapabilities(
             name=self.name, available=True, kind="pallas",
             devices=_device_platforms(), max_p=1024, max_events_pow2=True,
             note="interpret mode: validates kernel semantics, not kernel perf")
+
+    def local_devices(self) -> tuple:
+        return ()  # python-interpreted: device sharding is meaningless
 
 
 _REGISTRY: Dict[str, ExecutionBackend] = {}
@@ -304,6 +439,70 @@ def get_backend(
     except KeyError:
         raise ValueError(f"unknown backend {backend!r}; registered: "
                          f"{backend_names()}") from None
+
+
+def cheapest_backend() -> ExecutionBackend:
+    """The lowest-fixed-overhead available backend: the serial oracle when
+    usable (no compile, no device dispatch), else the auto-detected one."""
+    b = _REGISTRY.get("oracle")
+    if b is not None and b.capabilities().available:
+        return b
+    return get_backend(None)
+
+
+def reroute_small_batch(be: ExecutionBackend, model,
+                        n_rows: int) -> ExecutionBackend:
+    """Small-batch crossover (DESIGN.md §8): when a batch is below the
+    backend's ``crossover_rows``, its fixed XLA dispatch/compile overhead
+    exceeds the whole batch's simulation cost, so run the rows on
+    :func:`cheapest_backend` instead — safe because all backends are
+    bit-identical on the same rows. Only configs the oracle models exactly
+    are rerouted: the divisible task model without trace logging (the
+    oracle has no capacity-halt or trace modelling), within the oracle's
+    ``max_p``. Callers opt in (``sweep.run_rows`` does so only when the
+    backend was auto-selected, so an explicitly requested backend always
+    runs)."""
+    caps = be.capabilities()
+    if caps.crossover_rows <= 0 or n_rows >= caps.crossover_rows:
+        return be
+    cheap = cheapest_backend()
+    if cheap.name == be.name:
+        return be
+    model = sw.as_model(model)
+    if model.log_trace or not isinstance(model, dv.DivisibleModel):
+        return be
+    ccaps = cheap.capabilities()
+    if not ccaps.available or model.p > ccaps.max_p:
+        return be
+    return cheap
+
+
+def default_jit_cache_dir() -> Path:
+    return Path(__file__).resolve().parents[3] / "artifacts" / "jit_cache"
+
+
+def enable_compile_cache(path: Union[None, str, os.PathLike] = None) -> Path:
+    """Opt into JAX's persistent compilation cache so worker processes stop
+    re-jitting identical programs across runs.
+
+    ``path`` defaults to the ``REPRO_WS_JIT_CACHE`` environment variable,
+    else ``artifacts/jit_cache/`` in the repo. The directory is created and
+    ``jax_compilation_cache_dir`` pointed at it; the persistence thresholds
+    are dropped to zero so even the small event-loop programs are kept.
+    Returns the cache directory. Safe to call repeatedly."""
+    if path is None:
+        env = os.environ.get(JIT_CACHE_ENV, "").strip()
+        path = env or default_jit_cache_dir()
+    p = Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(p))
+    for opt, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                     ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(opt, val)
+        except (AttributeError, ValueError):  # older jax: defaults are fine
+            pass
+    return p
 
 
 def pallas_interpret_default() -> bool:

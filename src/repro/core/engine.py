@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -431,6 +431,270 @@ def _simulate(model: TaskModel, scn: Scenario):
     return _simulate_impl(model, jnp.asarray(model.topology.cluster_id),
                           jnp.asarray(model.topology.hops),
                           model.static_arrays(), scn)
+
+
+# ---------------------------------------------------------------------------
+# Segmented execution: the same event loop, cut into fixed-size event
+# segments with host-side active-lane compaction between them (DESIGN.md §8).
+#
+# Under vmap, one monolithic while_loop convoys: every lane pays
+# max(events-over-lanes) iterations, so a batch costs n_rows x max(events)
+# instead of sum(events). Segmenting the loop lets the host harvest finished
+# lanes between segments and gather the survivors into a smaller (pow2)
+# batch, so dead lanes stop burning VPU cycles. Each lane's event sequence
+# is untouched -- the inner loop body is byte-for-byte `_simulate_impl`'s
+# body and lanes are independent under vmap -- so results are bit-identical
+# to the monolithic loop (same ENGINE_VERSION, same store keys).
+# ---------------------------------------------------------------------------
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def default_segment_len(max_events: int, ev_budget=None) -> int:
+    """Segment length for the segmented driver, derived from the static
+    model cap and (when present) the per-row event budgets: small caps run
+    as a single exact segment, large caps use short segments so finished
+    lanes are harvested (and the batch compacted) long before the stragglers
+    finish."""
+    base = int(max_events)
+    if ev_budget is not None:
+        b = np.asarray(ev_budget, np.int64)
+        pos = b[b > 0]
+        if pos.size:
+            base = int(min(base, int(pos.min())))
+    return int(max(32, min(128, _pow2ceil(base))))
+
+
+def _segment_impl(model: TaskModel, cid, hops, arrays, scn: Scenario,
+                  core: CoreState, ms, seg_len: int):
+    """Run up to ``seg_len`` further events of one lane. The loop body and
+    termination condition are identical to :func:`_simulate_impl`; the only
+    extra clause is the per-segment event counter, so chaining segments
+    reproduces the monolithic loop exactly."""
+    handlers = [functools.partial(h, arrays, cid, hops, scn)
+                for h in (model.on_idle, model.on_request, model.on_answer)]
+    budget = jnp.minimum(jnp.int32(model.max_events),
+                         jnp.asarray(scn.max_events, jnp.int32))
+
+    def cond(s):
+        c, _, k = s
+        return (~c.done) & (c.n_events < budget) & (~c.halt) & (k < seg_len)
+
+    def body(s):
+        c, m, k = s
+        i = jnp.argmin(c.ev_time).astype(jnp.int32)
+        t = c.ev_time[i]
+        c = c._replace(t=t, n_events=c.n_events + 1)
+        c, m = lax.switch(c.state[i], handlers, c, m, i, t)
+        return (c, m, k + jnp.int32(1))
+
+    core, ms, k = lax.while_loop(cond, body, (core, ms, jnp.int32(0)))
+    fin = core.done | core.halt | (core.n_events >= budget)
+    return core, ms, fin, k
+
+
+def _donate_ok() -> bool:
+    """Buffer donation is a no-op (with a warning) on CPU; only ask for it
+    where the runtime honours it."""
+    try:
+        return jax.default_backend() in ("gpu", "tpu")
+    except RuntimeError:
+        return False
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_step(model: TaskModel, seg_len: int):
+    """Jitted batched segment: (scn, state) -> (state', fin, k_max, k_sum).
+
+    ``fin`` is the per-lane finished mask, ``k_max`` the number of batched
+    loop iterations the segment actually spun (the convoy cost), ``k_sum``
+    the useful events executed -- the driver's wasted-lane telemetry.
+    """
+    cid = jnp.asarray(model.topology.cluster_id)
+    hops = jnp.asarray(model.topology.hops)
+    arrays = model.static_arrays()
+
+    def one(scn, state):
+        core, ms = state
+        return _segment_impl(model, cid, hops, arrays, scn, core, ms, seg_len)
+
+    def step(scn, state):
+        core, ms, fin, k = jax.vmap(one)(scn, state)
+        return (core, ms), fin, jnp.max(k), jnp.sum(k)
+
+    donate = (1,) if _donate_ok() else ()
+    return jax.jit(step, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=64)
+def _init_fn(model: TaskModel):
+    arrays = model.static_arrays()
+
+    def one(scn):
+        return model.init(arrays, scn, init_core(model, scn))
+
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=64)
+def _results_fn(model: TaskModel):
+    return jax.jit(jax.vmap(lambda core, ms: model.results(core, ms)))
+
+
+def _compact_impl(state, scn: Scenario, idx, n_real):
+    """Gather lanes ``idx`` of (state, scn) into a dense batch; positions
+    >= ``n_real`` are padding (copies of lane idx[k]) force-marked done so
+    they never execute another event."""
+    take = lambda x: jnp.take(x, idx, axis=0)
+    core, ms = jax.tree.map(take, state)
+    scn = jax.tree.map(take, scn)
+    pad = jnp.arange(idx.shape[0], dtype=jnp.int32) >= n_real
+    core = core._replace(done=core.done | pad)
+    return (core, ms), scn
+
+
+@functools.lru_cache(maxsize=1)
+def _compact_fn():
+    donate = (0, 1) if _donate_ok() else ()
+    return jax.jit(_compact_impl, donate_argnums=donate)
+
+
+@dataclasses.dataclass
+class SegmentStats:
+    """Telemetry of one segmented run (the wasted-lane accounting the
+    backend-matrix bench reports)."""
+    n_segments: int = 0
+    n_compactions: int = 0
+    lane_cycles: int = 0      # sum over segments of batch_width * iterations
+    events_executed: int = 0  # useful events actually run
+    max_width: int = 0
+    final_width: int = 0
+
+    @property
+    def wasted_frac(self) -> float:
+        """Fraction of lane-iterations spent on finished/padded lanes."""
+        if self.lane_cycles <= 0:
+            return 0.0
+        return 1.0 - self.events_executed / self.lane_cycles
+
+    def merge(self, other: "SegmentStats") -> "SegmentStats":
+        return SegmentStats(
+            n_segments=self.n_segments + other.n_segments,
+            n_compactions=self.n_compactions + other.n_compactions,
+            lane_cycles=self.lane_cycles + other.lane_cycles,
+            events_executed=self.events_executed + other.events_executed,
+            max_width=max(self.max_width, other.max_width),
+            final_width=max(self.final_width, other.final_width))
+
+
+class SegmentedRun:
+    """Host-side driver of one segmented batched simulation.
+
+    ``step()`` dispatches one segment and harvests the lanes it finished;
+    when the count of survivors drops to half a power of two below the
+    current batch width, the batch is compacted (gather into a dense pow2
+    prefix, padding lanes marked done). Drive to completion with
+    :func:`simulate_segmented`, or interleave several runs (one per device)
+    via :func:`run_segmented_chunks` so their dispatches overlap.
+    """
+
+    def __init__(self, model: TaskModel, scn: Scenario,
+                 seg_len: Optional[int] = None, device=None):
+        n = int(scn.W.shape[0])
+        if n == 0:
+            raise ValueError("segmented run needs at least one scenario row")
+        if seg_len is None:
+            seg_len = default_segment_len(model.max_events)
+        self.model = model
+        self.seg_len = int(seg_len)
+        self._step_fn = _segment_step(model, self.seg_len)
+        self._results = _results_fn(model)
+        if device is not None:
+            scn = jax.device_put(scn, device)
+        self.scn = scn
+        self.state = _init_fn(model)(scn)
+        self.idx = np.arange(n)            # original row per lane; -1 = pad
+        self.n = n
+        self._parts: list = []
+        self._part_idx: list = []
+        self.stats = SegmentStats(max_width=n, final_width=n)
+        self.done = False
+
+    def step(self):
+        """Dispatch one segment; harvest finished lanes; maybe compact."""
+        if self.done:
+            return
+        self.state, fin_d, k_max, k_sum = self._step_fn(self.scn, self.state)
+        fin = np.asarray(fin_d)
+        width = fin.shape[0]
+        self.stats.n_segments += 1
+        self.stats.lane_cycles += width * int(k_max)
+        self.stats.events_executed += int(k_sum)
+        real = self.idx >= 0
+        newly = fin & real
+        if newly.any():
+            res = self._results(*self.state)
+            self._parts.append(
+                jax.tree.map(lambda x: np.asarray(x)[newly], res))
+            self._part_idx.append(self.idx[newly])
+            self.idx = np.where(newly, -1, self.idx)
+            real = self.idx >= 0
+        k = int(real.sum())
+        if k == 0:
+            self.done = True
+            return
+        new_width = _pow2ceil(k)
+        if new_width <= width // 2:
+            keep = np.flatnonzero(real)
+            gidx = np.concatenate(
+                [keep, np.zeros(new_width - k, np.int64)]).astype(np.int32)
+            self.state, self.scn = _compact_fn()(
+                self.state, self.scn, jnp.asarray(gidx), jnp.int32(k))
+            self.idx = np.concatenate(
+                [self.idx[keep], np.full(new_width - k, -1)])
+            self.stats.n_compactions += 1
+            self.stats.final_width = new_width
+
+    def result(self):
+        """Model result NamedTuple (numpy leaves, original row order)."""
+        if not self.done:
+            raise RuntimeError("segmented run not finished; call step()")
+        order = np.argsort(np.concatenate(self._part_idx), kind="stable")
+        return jax.tree.map(
+            lambda *xs: np.concatenate(xs, axis=0)[order], *self._parts)
+
+
+def simulate_segmented(model: TaskModel, scn: Scenario,
+                       seg_len: Optional[int] = None, device=None):
+    """Segmented batched simulation -> (results, :class:`SegmentStats`).
+
+    Bit-identical to :func:`simulate_batch` on the same scenario batch (the
+    segmentation/compaction parity suite in ``tests/test_segmented.py``
+    enforces it); asymptotically ``sum(events)`` instead of
+    ``n_rows x max(events)`` wall-clock under heavy-tailed event counts.
+    """
+    run = SegmentedRun(model, scn, seg_len=seg_len, device=device)
+    while not run.done:
+        run.step()
+    return run.result(), run.stats
+
+
+def run_segmented_chunks(model: TaskModel, scns, devices,
+                         seg_len: Optional[int] = None):
+    """Drive one :class:`SegmentedRun` per (scenario chunk, device) with
+    round-robin stepping, so each device's next segment is dispatched while
+    the others are still computing. Returns (results list, stats list)."""
+    runs = [SegmentedRun(model, s, seg_len=seg_len, device=d)
+            for s, d in zip(scns, devices)]
+    while True:
+        live = [r for r in runs if not r.done]
+        if not live:
+            break
+        for r in live:
+            r.step()
+    return [r.result() for r in runs], [r.stats for r in runs]
 
 
 @functools.lru_cache(maxsize=64)

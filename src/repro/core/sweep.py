@@ -342,15 +342,25 @@ def resolve_model(
 def run_rows(model: eng.TaskModel, rows: GridRows, remote_prob: float = 0.25,
              mesh: Optional[Mesh] = None,
              shard_axes: Sequence[str] = ("data",),
-             backend=None, ev_budget=None) -> GridResult:
+             backend=None, ev_budget=None, devices=None,
+             reroute: Optional[bool] = None) -> GridResult:
     """Run one batched simulation over canonical rows -> GridResult.
 
     ``backend`` selects the execution substrate (name, backend object, or
     None for auto-detection — see ``repro.core.backend``); all backends are
     bit-identical on the same rows. ``mesh`` shards the batch axis over a
-    JAX mesh and therefore requires the ``jax`` backend. ``ev_budget`` is a
-    per-row (or scalar) event budget truncating the loop below the model's
-    static cap (exact — see ``engine.Scenario.max_events``).
+    JAX mesh and therefore requires the ``jax`` backend; without a mesh the
+    backend itself shards contiguous row chunks across every local device
+    (``devices=`` narrows the set). ``ev_budget`` is a per-row (or scalar)
+    event budget truncating the loop below the model's static cap (exact —
+    see ``engine.Scenario.max_events``).
+
+    ``reroute`` controls the small-batch crossover
+    (``backend.reroute_small_batch``): batches below the selected backend's
+    ``crossover_rows`` run on the cheapest available backend instead of
+    paying fixed XLA dispatch overhead. Default: on exactly when the
+    backend was auto-selected (``backend is None``), so naming a backend
+    always runs that backend.
     """
     from repro.core import backend as bk
     if mesh is not None:
@@ -364,8 +374,13 @@ def run_rows(model: eng.TaskModel, rows: GridRows, remote_prob: float = 0.25,
                                  ev_budget=ev_budget)
         res = simulate_sharded(model, scn, mesh, shard_axes)
         return grid_from_result(model.p, rows, res)
-    return bk.get_backend(backend).run_rows(
-        model, rows, remote_prob=remote_prob, ev_budget=ev_budget)
+    be = bk.get_backend(backend)
+    if reroute is None:
+        reroute = backend is None
+    if reroute:
+        be = bk.reroute_small_batch(be, model, len(rows))
+    return be.run_rows(model, rows, remote_prob=remote_prob,
+                       ev_budget=ev_budget, devices=devices)
 
 
 def run_grid(

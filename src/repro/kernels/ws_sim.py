@@ -45,7 +45,8 @@ def _kernel(*refs, model, n_const, n_scn, scn_def, bool_mask):
         ref[(0,) + (slice(None),) * leaf.ndim] = val
 
 
-def ws_sim_pallas(model, scn: eng.Scenario, interpret: Optional[bool] = None):
+def ws_sim_pallas(model, scn: eng.Scenario, interpret: Optional[bool] = None,
+                  grid_chunk: Optional[int] = None):
     """Batched simulation; ``scn`` leaves have leading batch dim G.
 
     ``model`` is a TaskModel or any engine config (``EngineConfig`` /
@@ -56,11 +57,35 @@ def ws_sim_pallas(model, scn: eng.Scenario, interpret: Optional[bool] = None):
     ``interpret=None`` defers to the backend registry's auto-detection
     (compiled via Mosaic on TPU hosts, interpret mode elsewhere;
     ``REPRO_WS_BACKEND=pallas|pallas_interpret`` overrides).
+
+    ``grid_chunk`` splits the ``(G,)`` grid into fixed-size segments run as
+    separate ``pallas_call`` dispatches: every dispatch then has the same
+    grid shape, so Mosaic compiles one program per model regardless of
+    batch size (and the chunks are independently shardable). The batch is
+    padded up to a chunk multiple with copies of row 0 whose event budget
+    is zero — the padded lanes exit the loop before executing a single
+    event, and their rows are dropped from the output. Bit-exactness is
+    untouched: grid cells are independent.
     """
     if interpret is None:
         interpret = pallas_interpret_default()
     model = as_model(model)
     G = int(scn.W.shape[0])
+    if grid_chunk is not None and G > 0:
+        c = max(int(grid_chunk), 1)
+        pad = (-G) % c
+        if pad:
+            def pad_leaf(x):
+                return jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+            scn = jax.tree.map(pad_leaf, scn)
+            scn = scn._replace(max_events=scn.max_events.at[G:].set(0))
+        chunks = [jax.tree.map(lambda x: x[lo:lo + c], scn)
+                  for lo in range(0, G + pad, c)]
+        outs = [ws_sim_pallas(model, ck, interpret=interpret)
+                for ck in chunks]
+        res = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+        return jax.tree.map(lambda x: x[:G], res) if pad else res
 
     consts = (jnp.asarray(model.topology.cluster_id),
               jnp.asarray(model.topology.hops)) + tuple(model.static_arrays())

@@ -39,14 +39,29 @@ class SimulationService:
                  mesh=None, shard_axes: Sequence[str] = ("data",),
                  confidence: float = 0.95, pad_pow2: bool = True,
                  relax_max_events: bool = True,
-                 lock_wait_s: Optional[float] = 60.0):
+                 lock_wait_s: Optional[float] = 60.0,
+                 straggler_sort: bool = True,
+                 compile_cache: Union[None, bool, str, os.PathLike] = None):
+        from repro.core import backend as bk_mod
         self.store = store if store is not None else ResultStore(root=root)
         self.broker = QueryBroker(store=self.store, mesh=mesh,
                                   shard_axes=shard_axes,
                                   confidence=confidence, pad_pow2=pad_pow2,
                                   relax_max_events=relax_max_events,
-                                  lock_wait_s=lock_wait_s)
+                                  lock_wait_s=lock_wait_s,
+                                  straggler_sort=straggler_sort)
         self.confidence = float(confidence)
+        # Opt-in persistent XLA compilation cache: None defers to the
+        # REPRO_WS_JIT_CACHE env var, True uses the default
+        # artifacts/jit_cache/ dir, a path uses that path, False disables.
+        if compile_cache is None:
+            compile_cache = bool(
+                os.environ.get(bk_mod.JIT_CACHE_ENV, "").strip())
+        if compile_cache:
+            self.compile_cache_dir = bk_mod.enable_compile_cache(
+                None if compile_cache is True else compile_cache)
+        else:
+            self.compile_cache_dir = None
 
     # -- query construction -------------------------------------------------
 
@@ -185,12 +200,16 @@ class SimulationService:
         return self.broker.n_dispatches
 
     def stats(self) -> dict:
-        from repro.core.backend import default_backend_name
+        from repro.core.backend import default_backend_name, get_backend
         return dict(store=self.store.stats(),
                     n_dispatches=self.broker.n_dispatches,
                     n_cache_hits=self.broker.n_cache_hits,
                     n_queries=self.broker.n_queries,
                     n_lock_waits=self.broker.n_lock_waits,
                     n_lock_served=self.broker.n_lock_served,
+                    n_history_cells=len(self.broker.history),
                     default_backend=default_backend_name(),
+                    n_devices=get_backend().capabilities().n_devices,
+                    compile_cache=str(self.compile_cache_dir)
+                    if self.compile_cache_dir else None,
                     engine_version=eng.ENGINE_VERSION)

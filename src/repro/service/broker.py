@@ -438,6 +438,65 @@ def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
 
 
+def _rows_cols(rows: GridRows) -> np.ndarray:
+    """(n, 5) scenario-cell columns (everything but the seed)."""
+    return np.stack([np.asarray(rows.W), np.asarray(rows.lam_local),
+                     np.asarray(rows.lam_remote),
+                     np.asarray(rows.theta_static),
+                     np.asarray(rows.theta_comm)], axis=1).astype(np.int64)
+
+
+class EventHistory:
+    """EMA of observed per-row event counts, keyed by (bucket signature,
+    scenario cell). Drives the broker's straggler-aware ordering: sorting a
+    coalesced batch by expected event count gives each contiguous device
+    chunk a tight intra-chunk spread, which is exactly what the segmented
+    engine's compaction (and the plain vmap convoy) wants. Predictions fall
+    back to a λ-derived heuristic (the makespan/steal-cycle shape of
+    ``divisible.default_max_events``) until a cell has been observed."""
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = float(alpha)
+        self._ema: Dict[tuple, float] = {}
+
+    def __len__(self) -> int:
+        return len(self._ema)
+
+    def observe(self, sig: str, cols: np.ndarray, n_events) -> None:
+        cols = np.asarray(cols)
+        ev = np.asarray(n_events, np.float64)
+        uniq, inv = np.unique(cols, axis=0, return_inverse=True)
+        for u in range(len(uniq)):
+            mean = float(ev[inv == u].mean())
+            key = (sig,) + tuple(int(v) for v in uniq[u])
+            old = self._ema.get(key)
+            self._ema[key] = mean if old is None else \
+                (1.0 - self.alpha) * old + self.alpha * mean
+
+    def observe_grid(self, sig: str, grid: GridResult) -> None:
+        ev = grid.extras.get("n_events")
+        if ev is None or len(grid) == 0:
+            return
+        cols = np.stack([grid.W, grid.extras["lam_local"], grid.lam,
+                         grid.theta_static, grid.theta_comm],
+                        axis=1).astype(np.int64)
+        self.observe(sig, cols, ev)
+
+    def predict(self, sig: str, p: int, cols: np.ndarray) -> np.ndarray:
+        cols = np.asarray(cols)
+        W = np.maximum(cols[:, 0], 1).astype(np.float64)
+        lam = np.maximum((cols[:, 1] + cols[:, 2]) / 2.0, 1.0)
+        makespan = W / max(p, 1) + 16.0 * lam * np.maximum(
+            np.log2(np.maximum(W, 2) / lam), 1.0)
+        out = p * (makespan / (2.0 * lam) + 8.0)
+        uniq, inv = np.unique(cols, axis=0, return_inverse=True)
+        for u in range(len(uniq)):
+            got = self._ema.get((sig,) + tuple(int(v) for v in uniq[u]))
+            if got is not None:
+                out[inv == u] = got
+        return out
+
+
 class _Bucket:
     """One coalesced dispatch group: every member shares the same canonical
     static config (modulo ``max_events`` under relaxation), ``remote_prob``
@@ -449,6 +508,7 @@ class _Bucket:
         self.canon = canon       # bucket-key canonical form
         self.rp = rp
         self.backend = backend
+        self.explicit = False    # any member explicitly named the backend
         # (query idx, tag, rows, member's own static max_events cap)
         self.members: List[Tuple[int, str, GridRows, int]] = []
 
@@ -469,7 +529,8 @@ class QueryBroker:
                  shard_axes: Sequence[str] = ("data",),
                  relax_max_events: bool = True,
                  lock_wait_s: Optional[float] = 60.0,
-                 lock_poll_s: float = 0.05):
+                 lock_poll_s: float = 0.05,
+                 straggler_sort: bool = True):
         self.store = store if store is not None else ResultStore()
         self.pad_pow2 = pad_pow2
         self.confidence = float(confidence)
@@ -477,14 +538,21 @@ class QueryBroker:
         self.lock_wait_s = lock_wait_s if lock_wait_s is None \
             else float(lock_wait_s)
         self.lock_poll_s = float(lock_poll_s)
+        # Straggler-aware dispatch: order a bucket's rows by expected event
+        # count before running (results are un-permuted before fan-back, so
+        # answers and stored artifacts are byte-identical either way).
+        self.straggler_sort = bool(straggler_sort)
+        self.history = EventHistory()
         # Mesh-sharded dispatch only exists on the jax backend, so a mesh
         # pins the *default* (auto-detected) backend to jax; queries that
         # explicitly name another backend still fail fast in run_rows.
         self._mesh = mesh
         self._dispatch = dispatch or (
-            lambda model, rows, rp, backend=None, ev_budget=None: run_rows(
+            lambda model, rows, rp, backend=None, ev_budget=None,
+            reroute=None: run_rows(
                 model, rows, remote_prob=rp, mesh=mesh,
-                shard_axes=shard_axes, backend=backend, ev_budget=ev_budget))
+                shard_axes=shard_axes, backend=backend, ev_budget=ev_budget,
+                reroute=reroute))
         self._queue: List[Union[SimQuery, PairedQuery]] = []
         # Telemetry for the service_throughput bench / coalescing tests.
         self.n_dispatches = 0
@@ -525,6 +593,27 @@ class QueryBroker:
         return _PairedPending(q, self.confidence) if isinstance(
             q, PairedQuery) else _Pending(q, self.confidence)
 
+    def _history_sig(self, canon: dict, rp: float) -> str:
+        """Event-history key: the bucket identity minus the static cap (so
+        history survives cap relaxation) plus the remote-steal probability."""
+        if self.relax_max_events:
+            canon = {k: v for k, v in canon.items() if k != "max_events"}
+        return (json.dumps(canon, sort_keys=True, separators=(",", ":"))
+                + f":{remote_prob_u32(float(rp))}")
+
+    def _observe_cached(self, q, res) -> None:
+        """Feed stored event counts into the straggler history — recorded
+        ``n_events`` from prior rounds (any process sharing the store) make
+        the ordering exact instead of heuristic."""
+        if isinstance(q, PairedQuery):
+            arms = ((q.a, res.grid_a), (q.b, res.grid_b))
+        else:
+            arms = ((q, res.grid),)
+        for arm, grid in arms:
+            self.history.observe_grid(
+                self._history_sig(store_mod.canonical_model(arm.model),
+                                  arm.remote_prob), grid)
+
     def flush(self) -> List[Union[QueryResult, PairedResult]]:
         """Answer every queued query; one dispatch per (bucket, round)."""
         queue, self._queue = self._queue, []
@@ -541,6 +630,7 @@ class QueryBroker:
             cached = self._from_cache(q, key)
             if cached is not None:
                 self.n_cache_hits += 1
+                self._observe_cached(q, cached)
                 results[i] = cached
             elif key in key_owner:
                 aliases[i] = key_owner[key]
@@ -629,6 +719,7 @@ class QueryBroker:
                         assert bucket.canon == canon_b, (
                             "bucket members' canonical model configs "
                             "disagree despite equal bucket keys")
+                    bucket.explicit |= backend is not None
                     bucket.members.append((i, tag, rows,
                                            int(model.max_events)))
             if not buckets:
@@ -659,22 +750,58 @@ class QueryBroker:
         else:
             cap = int(model.max_events)
             budgets = None
+        # Straggler-aware ordering: dispatch the batch sorted by expected
+        # event count (history EMA, else λ heuristic), so contiguous device
+        # chunks have tight intra-chunk spread and segmented compaction
+        # retires whole width levels at once. The permutation is inverted
+        # before fan-back: answers and stored artifacts stay byte-identical
+        # to an unsorted dispatch.
+        sig = self._history_sig(bucket.canon, bucket.rp)
+        cols = _rows_cols(rows)
+        order = None
+        if self.straggler_sort and n > 1:
+            srt = np.argsort(
+                self.history.predict(sig, model.p, cols), kind="stable")
+            if not np.array_equal(srt, np.arange(n)):
+                order = srt
+                rows = GridRows(*(np.asarray(a)[order] for a in rows))
+                if budgets is not None:
+                    budgets = budgets[order]
         padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 else rows
         if budgets is not None and len(padded) > n:
             budgets = np.concatenate(
                 [budgets, np.full(len(padded) - n, eng.INF32, np.int32)])
         grid = self._dispatch(model, padded, bucket.rp,
-                              backend=bucket.backend, ev_budget=budgets)
+                              backend=bucket.backend, ev_budget=budgets,
+                              reroute=not bucket.explicit)
         self.n_dispatches += 1
         self.dispatch_log.append(dict(
             n_queries=len(bucket.members), n_rows=n, n_padded=len(padded),
             backend=bucket.backend, max_events=cap,
-            relaxed=bool(self.relax_max_events and len(set(caps)) > 1)))
+            relaxed=bool(self.relax_max_events and len(set(caps)) > 1),
+            sorted=order is not None))
+        if order is not None:
+            inv = np.empty(n, np.int64)
+            inv[order] = np.arange(n)
+            grid = _take_grid(grid, inv)  # member order restored, pads gone
+        ev = grid.extras.get("n_events")
+        if ev is not None and n > 0:
+            self.history.observe(sig, cols, np.asarray(ev)[:n])
         off = 0
         for i, tag, rws, _ in bucket.members:
             part = _slice_grid(grid, off, off + len(rws))
             pendings[i].feed_part(tag, part)
             off += len(rws)
+
+
+def _take_grid(grid: GridResult, idx: np.ndarray) -> GridResult:
+    fields = {
+        f.name: np.asarray(getattr(grid, f.name))[idx]
+        for f in dataclasses.fields(GridResult)
+        if f.name not in ("p", "extras")
+    }
+    extras = {k: np.asarray(v)[idx] for k, v in grid.extras.items()}
+    return GridResult(p=grid.p, extras=extras, **fields)
 
 
 def _slice_grid(grid: GridResult, lo: int, hi: int) -> GridResult:
