@@ -4,15 +4,20 @@ baseline ``BENCH_backends.json``.
 Usage::
 
     python benchmarks/check_regression.py BASELINE.json NEW.json \
-        [--threshold 0.2] [--strict]
+        [--threshold 0.2] [--strict] \
+        [--obs-baseline BENCH_obs.json --obs-new BENCH_obs.json]
 
 Backends present and available in both files are compared on ``rows_per_s``;
 a drop of more than ``--threshold`` (default 20%) prints a warning (as a
-GitHub Actions ``::warning::`` annotation when running in CI). Exit status
-is 0 unless ``--strict`` is given and a regression was found — the CI step
-is deliberately non-blocking: CPU runners are noisy, and the committed
-baseline may come from different hardware. The point is a visible trajectory,
-not a gate.
+GitHub Actions ``::warning::`` annotation when running in CI). The same
+warn-only policy covers two quality signals: the wasted-lane fraction of
+every segmented backend (compared on *useful* fraction ``1 - wasted``, so
+"5% more waste" means the same thing at 10% waste as at 60%), and — when the
+``--obs-*`` files from the ``obs_overhead`` bench are given — the service
+cache-hit ratio. Exit status is 0 unless ``--strict`` is given and a
+regression was found — the CI step is deliberately non-blocking: CPU runners
+are noisy, and the committed baseline may come from different hardware. The
+point is a visible trajectory, not a gate.
 """
 from __future__ import annotations
 
@@ -42,6 +47,42 @@ def compare(baseline: dict, new: dict, threshold: float) -> list:
     return regressions
 
 
+def compare_wasted(baseline: dict, new: dict, threshold: float) -> list:
+    """Return [(backend, old_wasted, new_wasted, useful_ratio), ...] for
+    every backend whose useful lane fraction ``1 - wasted_frac_actual``
+    shrank by more than ``threshold``."""
+    old_by = {b["backend"]: b for b in baseline.get("backends", [])
+              if b.get("available") and "wasted_frac_actual" in b}
+    new_by = {b["backend"]: b for b in new.get("backends", [])
+              if b.get("available") and "wasted_frac_actual" in b}
+    regressions = []
+    for name in sorted(set(old_by) & set(new_by)):
+        old_useful = 1.0 - float(old_by[name]["wasted_frac_actual"])
+        new_useful = 1.0 - float(new_by[name]["wasted_frac_actual"])
+        if old_useful <= 0.0:
+            continue
+        ratio = new_useful / old_useful
+        if ratio < 1.0 - threshold:
+            regressions.append((name,
+                                float(old_by[name]["wasted_frac_actual"]),
+                                float(new_by[name]["wasted_frac_actual"]),
+                                ratio))
+    return regressions
+
+
+def compare_cache_hits(baseline: dict, new: dict, threshold: float):
+    """Return (old_ratio, new_ratio, ratio) when the obs bench's service
+    cache-hit ratio dropped by more than ``threshold``, else None."""
+    old_hr = baseline.get("cache_hit_ratio")
+    new_hr = new.get("cache_hit_ratio")
+    if old_hr is None or new_hr is None or float(old_hr) <= 0.0:
+        return None
+    ratio = float(new_hr) / float(old_hr)
+    if ratio < 1.0 - threshold:
+        return (float(old_hr), float(new_hr), ratio)
+    return None
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", type=Path)
@@ -50,6 +91,10 @@ def main(argv=None) -> int:
                     help="relative rows/s drop that counts as a regression")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero on regression (default: warn only)")
+    ap.add_argument("--obs-baseline", type=Path, default=None,
+                    help="baseline BENCH_obs.json (cache-hit-ratio guard)")
+    ap.add_argument("--obs-new", type=Path, default=None,
+                    help="fresh BENCH_obs.json (cache-hit-ratio guard)")
     args = ap.parse_args(argv)
 
     for path in (args.baseline, args.new):
@@ -59,8 +104,8 @@ def main(argv=None) -> int:
     baseline = json.loads(args.baseline.read_text())
     new = json.loads(args.new.read_text())
 
-    regressions = compare(baseline, new, args.threshold)
     warn = "::warning::" if os.environ.get("GITHUB_ACTIONS") else "WARNING: "
+    regressions = compare(baseline, new, args.threshold)
     for name, old_rps, new_rps, ratio in regressions:
         print(f"{warn}backend {name!r} rows/s regressed "
               f"{old_rps:,.1f} -> {new_rps:,.1f} ({ratio:.0%} of baseline, "
@@ -73,7 +118,38 @@ def main(argv=None) -> int:
     if not regressions:
         print(f"check_regression: no rows/s regression > "
               f"{args.threshold:.0%} across {compared}")
-    return 1 if (regressions and args.strict) else 0
+
+    wasted = compare_wasted(baseline, new, args.threshold)
+    for name, old_w, new_w, ratio in wasted:
+        print(f"{warn}backend {name!r} wasted-lane fraction regressed "
+              f"{old_w:.1%} -> {new_w:.1%} wasted "
+              f"({ratio:.0%} of baseline useful fraction, "
+              f"threshold {1 - args.threshold:.0%})")
+    if not wasted:
+        print(f"check_regression: no wasted-lane regression > "
+              f"{args.threshold:.0%}")
+
+    cache_reg = None
+    if args.obs_baseline and args.obs_new:
+        if args.obs_baseline.exists() and args.obs_new.exists():
+            cache_reg = compare_cache_hits(
+                json.loads(args.obs_baseline.read_text()),
+                json.loads(args.obs_new.read_text()), args.threshold)
+            if cache_reg:
+                old_hr, new_hr, ratio = cache_reg
+                print(f"{warn}service cache-hit ratio regressed "
+                      f"{old_hr:.1%} -> {new_hr:.1%} "
+                      f"({ratio:.0%} of baseline, "
+                      f"threshold {1 - args.threshold:.0%})")
+            else:
+                print(f"check_regression: no cache-hit-ratio regression > "
+                      f"{args.threshold:.0%}")
+        else:
+            print("check_regression: obs bench file missing; "
+                  "skipping cache-hit-ratio guard")
+
+    any_regression = bool(regressions or wasted or cache_reg)
+    return 1 if (any_regression and args.strict) else 0
 
 
 if __name__ == "__main__":

@@ -19,6 +19,10 @@ artifacts/bench/). Figures:
                          (oracle / jax / pallas / pallas_interpret): rows/s
                          + bit-parity columns, emitted as
                          artifacts/bench/BENCH_backends.json
+  obs_overhead           observability-layer cost: tracer-enabled vs
+                         disabled throughput (<3% target) + cache-hit-ratio
+                         trajectory, emitted as artifacts/bench/BENCH_obs.json
+                         (+ obs_trace.json / obs_metrics.json CI artifacts)
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -499,6 +503,89 @@ def backend_matrix(reps: int):
          f"{fastest['backend']} at {fastest['rows_per_s']:,.0f} rows/s{vs}")
 
 
+def obs_overhead(reps: int):
+    """Cost of the observability layer (DESIGN.md §9) on the
+    ``backend_matrix`` workload: tracer-enabled vs disabled throughput on
+    the jax backend. Target: <3% overhead enabled, ~0% disabled (the
+    disabled path is a shared no-op span). Also emits the artifacts the
+    extended CI job uploads — a real Chrome-trace of a traced service
+    query + dispatch (``obs_trace.json``), the metrics snapshot
+    (``obs_metrics.json``) — and BENCH_obs.json with the cache-hit-ratio /
+    wasted-lane numbers check_regression.py guards."""
+    import shutil
+    import tempfile
+    from repro import obs
+    from repro.core.backend import get_backend
+    from repro.core.sweep import grid_rows, resolve_model, run_rows
+    from repro.service import SimulationService
+
+    p, W, lams = 16, 30_000, (2, 6, 20)
+    n_reps = max(reps + 6, 22)    # same convoy-regime grid as backend_matrix
+    topo = one_cluster(p, 1)
+    rows = grid_rows([W], lams, n_reps)
+    model = resolve_model(topo, "divisible", W_list=[W], lam_list=lams,
+                          pow2_max_events=True)
+    run = lambda: run_rows(model, rows, backend="jax", reroute=False)
+    run()                                    # compile + warm
+
+    def timed() -> float:
+        t0 = time.time()
+        run()
+        return time.time() - t0
+
+    # Interleave enabled/disabled runs and compare best-of: host timing
+    # noise drifts over seconds, so paired alternation + min is what
+    # actually resolves a few-percent effect.
+    offs, ons = [], []
+    tracer = None
+    for _ in range(5):
+        offs.append(timed())
+        with obs.trace_to() as tracer:
+            ons.append(timed())
+    dt_off, dt_on = min(offs), min(ons)
+    n_events = len(tracer)
+    overhead = dt_on / dt_off - 1.0
+    wasted = get_backend("jax").last_stats
+    wasted_frac = round(wasted.wasted_frac, 4) if wasted is not None else None
+
+    # Warm-over-cold service pass for the cache-hit-ratio trajectory, traced
+    # so the uploaded Chrome-trace shows a real query's full span tree.
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    reg = obs.MetricsRegistry()
+    svc = SimulationService(root=tmp, metrics=reg)
+    qkw = dict(W_list=[W], lam_list=list(lams), reps=min(n_reps, 16),
+               seed0=7, backend="jax")
+    with obs.trace_to(BENCH / "obs_trace.json") as qtr:
+        svc.query(topo, **qkw)               # cold: dispatches
+        svc.query(topo, **qkw)               # warm: store hit
+    snap = svc.stats()["metrics"]
+    c = snap["counters"]
+    hits = c.get("store.hits_mem", 0) + c.get("store.hits_disk", 0)
+    lookups = hits + c.get("store.misses", 0)
+    hit_ratio = round(hits / lookups, 4) if lookups else None
+    BENCH.mkdir(parents=True, exist_ok=True)
+    with open(BENCH / "obs_metrics.json", "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    out = dict(
+        n_rows=len(rows),
+        disabled_rows_per_s=round(len(rows) / dt_off, 2),
+        enabled_rows_per_s=round(len(rows) / dt_on, 2),
+        overhead_frac=round(overhead, 4),
+        n_trace_events=n_events,
+        trace_query_spans=len(qtr.durations_ms()),
+        cache_hit_ratio=hit_ratio,
+        wasted_frac_actual=wasted_frac)
+    _write_csv("obs_overhead", [out])
+    with open(BENCH / "BENCH_obs.json", "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    _row("obs_overhead", dt_on * 1e6 / len(rows),
+         f"tracer overhead {overhead:+.1%} ({out['enabled_rows_per_s']:,.0f}"
+         f" vs {out['disabled_rows_per_s']:,.0f} rows/s, {n_events} events;"
+         f" target <3%); cache_hit_ratio={hit_ratio}")
+
+
 def roofline(_reps: int):
     """Aggregate the dry-run artifacts into the §Roofline table."""
     cells = sorted((ART / "dryrun").glob("*.json"))
@@ -561,6 +648,7 @@ def main():
         "service_throughput": lambda: service_throughput(reps),
         "paired_comparison": lambda: paired_comparison(reps),
         "backend_matrix": lambda: backend_matrix(reps),
+        "obs_overhead": lambda: obs_overhead(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

@@ -21,6 +21,7 @@ benchmarks/ for the CSV versions used in EXPERIMENTS.md.
 """
 import numpy as np
 
+from repro import obs
 from repro.core import analysis, engine as eng, make_model, one_cluster
 from repro.core import divisible as dv
 from repro.service import PairedPolicy, SimulationService
@@ -162,6 +163,29 @@ def all_task_models(reps=8):
           f"(median splits {float(np.median(g.extras['n_splits'])):.0f})")
 
 
+def trace_and_metrics(out="paper_sweep_trace.json"):
+    """Beyond-paper: the observability layer (DESIGN.md §9). Trace one
+    query end-to-end — service.query -> broker.flush -> broker.dispatch ->
+    backend.run_rows -> engine.segment -> store puts/gets — into a
+    Perfetto-loadable Chrome-trace JSON, and print the span summary plus
+    the metrics snapshot that a monitoring daemon would scrape. The same
+    tracing is available process-wide via ``REPRO_WS_TRACE=path.json``."""
+    print("\n=== Observability: one traced query + metrics snapshot ===")
+    svc = SimulationService(metrics=obs.MetricsRegistry())
+    topo = one_cluster(16, 5)
+    with obs.trace_to(out) as tr:
+        svc.query(topo, W_list=[10**5], lam_list=[5], reps=32)
+        svc.query(topo, W_list=[10**5], lam_list=[5], reps=32)  # cache hit
+    print(tr.summary())
+    print(f"  Chrome trace -> {out} "
+          f"({len(tr.events())} events; open in ui.perfetto.dev)")
+    snap = svc.stats()["metrics"]
+    print("  metrics snapshot (daemon payload):")
+    for kind in ("counters", "gauges"):
+        for k, v in sorted(snap[kind].items()):
+            print(f"    {k}: {v}")
+
+
 if __name__ == "__main__":
     svc = SimulationService()
     overhead_and_fit(svc)
@@ -169,4 +193,5 @@ if __name__ == "__main__":
     mwt_vs_swt(svc)
     all_task_models()
     execution_backends()
+    trace_and_metrics()
     print(f"\nservice: {svc.stats()}")

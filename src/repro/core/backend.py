@@ -35,6 +35,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import engine as eng
 from repro.core import oracle as orc
 from repro.core import sweep as sw
@@ -141,7 +142,19 @@ class ExecutionBackend:
         model = sw.as_model(model)
         self._check(model)
         self.n_run_rows += 1
-        return self._run_rows(model, rows, remote_prob, ev_budget, devices)
+        # Reset before (not after) running: last_stats always describes THIS
+        # dispatch, so a monolithic run cannot leak the previous segmented
+        # run's wasted-lane telemetry.
+        self.last_stats = None
+        obs.REGISTRY.counter("backend.run_rows",
+                             {"backend": self.name}).inc()
+        with obs.span("backend.run_rows", backend=self.name,
+                      n_rows=len(rows)) as sp:
+            out = self._run_rows(model, rows, remote_prob, ev_budget, devices)
+            if self.last_stats is not None:
+                sp.set(n_segments=self.last_stats.n_segments,
+                       wasted_frac=round(self.last_stats.wasted_frac, 4))
+            return out
 
     def _run_rows(self, model, rows, remote_prob, ev_budget, devices):
         n = len(rows)
@@ -196,11 +209,8 @@ class OracleBackend(ExecutionBackend):
     def local_devices(self) -> tuple:
         return ()  # pure numpy: no device sharding
 
-    def run_rows(self, model, rows, remote_prob: float = 0.25,
-                 ev_budget=None, devices=None) -> "sw.GridResult":
-        model = sw.as_model(model)
-        self._check(model)
-        self.n_run_rows += 1
+    def _run_rows(self, model, rows, remote_prob, ev_budget,
+                  devices) -> "sw.GridResult":
         if model.log_trace:
             raise ValueError("oracle backend does not record traces; "
                              "use the 'jax' backend for log_trace models")

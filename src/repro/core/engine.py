@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import obs
 from repro.core import topology as topo_mod
 from repro.core.topology import Topology
 
@@ -623,9 +624,26 @@ class SegmentedRun:
         self.done = False
 
     def step(self):
-        """Dispatch one segment; harvest finished lanes; maybe compact."""
+        """Dispatch one segment; harvest finished lanes; maybe compact.
+
+        A segment boundary is the engine's host-side tick — the one moment
+        a device-resident run surfaces on the host — so it is where the
+        engine's span (``engine.segment``) and metrics land."""
         if self.done:
             return
+        with obs.span("engine.segment", width=len(self.idx),
+                      seg_len=self.seg_len) as sp:
+            self._step(sp)
+        m = obs.REGISTRY
+        m.counter("engine.segments").inc()
+        if self.done:
+            m.counter("engine.lane_cycles").inc(self.stats.lane_cycles)
+            m.counter("engine.events_executed").inc(
+                self.stats.events_executed)
+            m.gauge("engine.wasted_frac").set(
+                round(self.stats.wasted_frac, 4))
+
+    def _step(self, sp):
         self.state, fin_d, k_max, k_sum = self._step_fn(self.scn, self.state)
         fin = np.asarray(fin_d)
         width = fin.shape[0]
@@ -641,6 +659,7 @@ class SegmentedRun:
             self._part_idx.append(self.idx[newly])
             self.idx = np.where(newly, -1, self.idx)
             real = self.idx >= 0
+        sp.set(n_finished=int(newly.sum()))
         k = int(real.sum())
         if k == 0:
             self.done = True
@@ -656,6 +675,8 @@ class SegmentedRun:
                 [self.idx[keep], np.full(new_width - k, -1)])
             self.stats.n_compactions += 1
             self.stats.final_width = new_width
+            sp.set(compacted_to=new_width)
+            obs.REGISTRY.counter("engine.compactions").inc()
 
     def result(self):
         """Model result NamedTuple (numpy leaves, original row order)."""

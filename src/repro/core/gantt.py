@@ -6,7 +6,12 @@ The jitted engine fills a preallocated int32 trace buffer with rows
 * per-processor activity intervals (the Gantt chart of Fig 7/8/13),
 * a Paje trace file readable by standard trace-analysis tools,
 * an ASCII Gantt for terminal inspection,
-* a JSON dump of the executed schedule (paper's JSON log, Fig 9 input).
+* a JSON dump of the executed schedule (paper's JSON log, Fig 9 input),
+* Chrome-trace/Perfetto events (:func:`to_chrome_events`): the engine's
+  *simulated-time* Gantt as its own Perfetto track group, mergeable with
+  the service's *wall-time* spans (``repro.obs``) into one timeline —
+  ``obs.write_chrome_trace(path, tracer.chrome_events(),
+  row_chrome_events(...))`` gives a file with both track groups.
 """
 from __future__ import annotations
 
@@ -15,10 +20,16 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import divisible as dv
 
 STATE_RUN = "RUN"
 STATE_IDLE = "IDLE"
+
+#: Chrome-trace process id of the simulated-time track group (the service's
+#: wall-time spans live on ``obs.HOST_PID``).
+SIM_PID = 2
+SIM_PROCESS_NAME = "engine (simulated time)"
 
 
 def decode_trace(trace: np.ndarray, n_trace: int, p: int, W: int,
@@ -89,6 +100,53 @@ def to_paje(runs: dict, makespan: int, name: str = "ws") -> str:
     events.sort(key=lambda e: e[0])
     out.extend(e[1] for e in events)
     return "\n".join(out) + "\n"
+
+
+def to_chrome_events(decoded: dict, makespan: int, pid: int = SIM_PID,
+                     process_name: str = SIM_PROCESS_NAME) -> List[dict]:
+    """Chrome-trace events of a decoded engine trace (simulated time).
+
+    One Perfetto thread track per processor: B/E ``RUN`` pairs for its run
+    intervals (ts in simulated time units, rendered as µs) plus instant
+    events for steal arrows (``steal`` on the thief at answer delivery,
+    ``steal_req`` at the granted request). Merge with the service tracer's
+    wall-time events via :func:`repro.obs.chrome_trace_doc` — distinct pids
+    keep the two time axes in separate track groups.
+    """
+    events: List[dict] = [{"ph": "M", "name": "process_name", "pid": pid,
+                           "tid": 0, "args": {"name": process_name}}]
+    runs = decoded["runs"]
+    for proc in sorted(runs):
+        events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                       "tid": proc, "args": {"name": f"P{proc}"}})
+    for proc in sorted(runs):
+        for t0, t1 in sorted(runs[proc]):
+            common = dict(cat="engine", pid=pid, tid=int(proc))
+            events.append({"ph": "B", "name": STATE_RUN,
+                           "ts": float(t0), **common})
+            events.append({"ph": "E", "name": STATE_RUN,
+                           "ts": float(t1), **common})
+    for arrow in decoded["arrows"]:
+        thief = int(arrow["thief"])
+        name = "steal" if "amount" in arrow else "steal_req"
+        events.append({"ph": "i", "name": name, "cat": "engine",
+                       "pid": pid, "tid": thief, "ts": float(arrow["t"]),
+                       "s": "t", "args": {k: v for k, v in arrow.items()
+                                          if k != "t"}})
+    return events
+
+
+def row_chrome_events(trace: np.ndarray, n_trace: int, p: int, W: int,
+                      makespan: int, pid: int = SIM_PID,
+                      process_name: str = SIM_PROCESS_NAME) -> List[dict]:
+    """Decode one traced engine row straight to Chrome-trace events."""
+    return to_chrome_events(decode_trace(trace, n_trace, p, W, makespan),
+                            makespan, pid=pid, process_name=process_name)
+
+
+#: Re-exported document helpers so log-engine callers need only this module.
+chrome_trace_doc = obs.chrome_trace_doc
+write_chrome_trace = obs.write_chrome_trace
 
 
 def to_json(result, p: int, W: int, extra: Optional[dict] = None) -> str:

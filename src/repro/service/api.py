@@ -17,6 +17,7 @@ from __future__ import annotations
 import os
 from typing import Callable, List, Optional, Sequence, Union
 
+from repro import obs
 from repro.core import engine as eng
 from repro.core.sweep import (GridResult, canonical_grid, lam_pair,
                               resolve_model, run_grid)
@@ -41,15 +42,23 @@ class SimulationService:
                  relax_max_events: bool = True,
                  lock_wait_s: Optional[float] = 60.0,
                  straggler_sort: bool = True,
-                 compile_cache: Union[None, bool, str, os.PathLike] = None):
+                 compile_cache: Union[None, bool, str, os.PathLike] = None,
+                 dispatch_log_max: Optional[int] = 1024,
+                 metrics: Optional[obs.MetricsRegistry] = None):
         from repro.core import backend as bk_mod
-        self.store = store if store is not None else ResultStore(root=root)
+        self.metrics = metrics if metrics is not None else obs.REGISTRY
+        self.store = store if store is not None else ResultStore(
+            root=root, metrics=self.metrics)
+        if metrics is not None and store is not None:
+            store.metrics = metrics     # one registry across the service
         self.broker = QueryBroker(store=self.store, mesh=mesh,
                                   shard_axes=shard_axes,
                                   confidence=confidence, pad_pow2=pad_pow2,
                                   relax_max_events=relax_max_events,
                                   lock_wait_s=lock_wait_s,
-                                  straggler_sort=straggler_sort)
+                                  straggler_sort=straggler_sort,
+                                  dispatch_log_max=dispatch_log_max,
+                                  metrics=self.metrics)
         self.confidence = float(confidence)
         # Opt-in persistent XLA compilation cache: None defers to the
         # REPRO_WS_JIT_CACHE env var, True uses the default
@@ -127,9 +136,12 @@ class SimulationService:
         self, queries: Sequence[Union[SimQuery, PairedQuery]]
     ) -> List[Union[QueryResult, PairedResult]]:
         """Answer a batch of concurrent questions in one coalesced flush."""
-        for q in queries:
-            self.broker.submit(q)
-        return self.broker.flush()
+        with obs.span("service.query", n_queries=len(queries)) as sp:
+            for q in queries:
+                self.broker.submit(q)
+            out = self.broker.flush()
+            sp.set(n_cached=sum(1 for r in out if r.from_cache))
+            return out
 
     def query_pair(self, query_a: SimQuery, query_b: SimQuery,
                    policy: Optional[PairedPolicy] = None) -> PairedResult:
@@ -200,16 +212,43 @@ class SimulationService:
         return self.broker.n_dispatches
 
     def stats(self) -> dict:
+        """Service telemetry. The flat keys are the legacy dashboard shape;
+        ``metrics`` is the full :meth:`obs.MetricsRegistry.snapshot` — the
+        daemon-ready payload that supersedes (and includes) everything the
+        flat keys report, plus spans' counter/gauge/histogram series."""
         from repro.core.backend import default_backend_name, get_backend
-        return dict(store=self.store.stats(),
+        default_backend = default_backend_name()
+        n_devices = get_backend().capabilities().n_devices
+        # Sync point-in-time series so snapshot() is self-contained.
+        m = self.metrics
+        m.gauge("broker.history_cells").set(len(self.broker.history))
+        m.gauge("broker.dispatch_log_len").set(len(self.broker.dispatch_log))
+        m.info("backend.default").set(default_backend)
+        m.gauge("backend.n_devices").set(n_devices)
+        m.info("engine.version").set(str(eng.ENGINE_VERSION))
+        m.info("service.compile_cache").set(
+            str(self.compile_cache_dir) if self.compile_cache_dir else "")
+        store_stats = self.store.stats()    # syncs the store.lru_len gauge
+        snapshot = m.snapshot()
+        if m is not obs.REGISTRY:
+            # Engine/backend instrumentation always writes to the global
+            # registry (core must not depend on service wiring); graft those
+            # series in so a private-registry snapshot is still complete.
+            for kind, series in obs.REGISTRY.snapshot().items():
+                for key, val in series.items():
+                    if key.startswith(("engine.", "backend.")):
+                        snapshot[kind].setdefault(key, val)
+        return dict(store=store_stats,
                     n_dispatches=self.broker.n_dispatches,
                     n_cache_hits=self.broker.n_cache_hits,
                     n_queries=self.broker.n_queries,
                     n_lock_waits=self.broker.n_lock_waits,
                     n_lock_served=self.broker.n_lock_served,
+                    n_dispatch_log_dropped=self.broker.n_dispatch_log_dropped,
                     n_history_cells=len(self.broker.history),
-                    default_backend=default_backend_name(),
-                    n_devices=get_backend().capabilities().n_devices,
+                    default_backend=default_backend,
+                    n_devices=n_devices,
                     compile_cache=str(self.compile_cache_dir)
                     if self.compile_cache_dir else None,
-                    engine_version=eng.ENGINE_VERSION)
+                    engine_version=eng.ENGINE_VERSION,
+                    metrics=snapshot)

@@ -48,10 +48,12 @@ import dataclasses
 import hashlib
 import json
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import backend as bk
 from repro.core import engine as eng
 from repro.core.sweep import (GridResult, GridRows, canonical_grid,
@@ -521,7 +523,11 @@ class QueryBroker:
     ``max_events`` cap (exact per-row budgets — see the module docstring);
     ``lock_wait_s`` bounds how long a flush polls the store for a key whose
     advisory lock another process holds (None disables locking entirely,
-    0 takes locks but never waits)."""
+    0 takes locks but never waits); ``dispatch_log_max`` bounds the
+    per-dispatch telemetry ring (oldest entries drop once full — the drop
+    count lands on the ``broker.dispatch_log_dropped`` metric — so a
+    long-lived process's log cannot grow without limit; 0/None unbounds
+    it)."""
 
     def __init__(self, store: Optional[ResultStore] = None,
                  dispatch=None, pad_pow2: bool = True,
@@ -530,7 +536,9 @@ class QueryBroker:
                  relax_max_events: bool = True,
                  lock_wait_s: Optional[float] = 60.0,
                  lock_poll_s: float = 0.05,
-                 straggler_sort: bool = True):
+                 straggler_sort: bool = True,
+                 dispatch_log_max: Optional[int] = 1024,
+                 metrics: Optional[obs.MetricsRegistry] = None):
         self.store = store if store is not None else ResultStore()
         self.pad_pow2 = pad_pow2
         self.confidence = float(confidence)
@@ -555,12 +563,22 @@ class QueryBroker:
                 reroute=reroute))
         self._queue: List[Union[SimQuery, PairedQuery]] = []
         # Telemetry for the service_throughput bench / coalescing tests.
+        # Legacy integer attributes stay (stats()/tests read them); every
+        # increment is mirrored into the metrics registry via _count.
+        self.metrics = metrics if metrics is not None else obs.REGISTRY
         self.n_dispatches = 0
         self.n_cache_hits = 0
         self.n_queries = 0
         self.n_lock_waits = 0     # keys found locked by another process
         self.n_lock_served = 0    # of those, answered by the other process
-        self.dispatch_log: List[dict] = []
+        self.dispatch_log_max = dispatch_log_max
+        self.n_dispatch_log_dropped = 0
+        self.dispatch_log: "deque[dict]" = deque(
+            maxlen=int(dispatch_log_max) if dispatch_log_max else None)
+
+    def _count(self, attr: str, metric: str, n: int = 1):
+        setattr(self, attr, getattr(self, attr) + n)
+        self.metrics.counter(metric).inc(n)
 
     def submit(self, query: Union[SimQuery, PairedQuery]) -> int:
         """Enqueue; returns the query's position for the next flush()."""
@@ -616,8 +634,15 @@ class QueryBroker:
 
     def flush(self) -> List[Union[QueryResult, PairedResult]]:
         """Answer every queued query; one dispatch per (bucket, round)."""
+        with obs.span("broker.flush", n_queries=len(self._queue)) as sp:
+            before = self.n_dispatches
+            out = self._flush()
+            sp.set(n_dispatches=self.n_dispatches - before)
+            return out
+
+    def _flush(self) -> List[Union[QueryResult, PairedResult]]:
         queue, self._queue = self._queue, []
-        self.n_queries += len(queue)
+        self._count("n_queries", "broker.queries", len(queue))
         results: List[Optional[object]] = [None] * len(queue)
         pendings: Dict[int, object] = {}
         key_owner: Dict[str, int] = {}   # identical questions share one run
@@ -629,17 +654,18 @@ class QueryBroker:
         for i, (q, key) in enumerate(zip(queue, keys)):
             cached = self._from_cache(q, key)
             if cached is not None:
-                self.n_cache_hits += 1
+                self._count("n_cache_hits", "broker.cache_hits")
                 self._observe_cached(q, cached)
                 results[i] = cached
             elif key in key_owner:
                 aliases[i] = key_owner[key]
+                self.metrics.counter("broker.aliased_queries").inc()
             else:
                 key_owner[key] = i
                 if self.lock_wait_s is not None \
                         and not self.store.try_lock(key):
                     waiting[i] = key     # someone else is computing this key
-                    self.n_lock_waits += 1
+                    self._count("n_lock_waits", "broker.lock_waits")
                 else:
                     if self.lock_wait_s is not None:
                         owned.add(key)
@@ -650,25 +676,27 @@ class QueryBroker:
         # stale — then we take over), bounded by lock_wait_s. Best-effort:
         # on timeout we compute anyway; correctness never needs the lock.
         if waiting:
-            deadline = time.monotonic() + self.lock_wait_s
-            while waiting:
-                for i in list(waiting):
-                    key = waiting[i]
-                    cached = self._from_cache(queue[i], key)
-                    if cached is not None:
-                        self.n_cache_hits += 1
-                        self.n_lock_served += 1
-                        results[i] = cached
-                        del waiting[i]
-                    elif self.store.try_lock(key):
-                        owned.add(key)
-                        pendings[i] = self._make_pending(queue[i])
-                        del waiting[i]
-                if not waiting or time.monotonic() >= deadline:
-                    break
-                time.sleep(self.lock_poll_s)
-            for i in waiting:            # wait budget spent: just compute
-                pendings[i] = self._make_pending(queue[i])
+            with obs.span("broker.lock_wait", n_keys=len(waiting)) as lsp:
+                deadline = time.monotonic() + self.lock_wait_s
+                while waiting:
+                    for i in list(waiting):
+                        key = waiting[i]
+                        cached = self._from_cache(queue[i], key)
+                        if cached is not None:
+                            self._count("n_cache_hits", "broker.cache_hits")
+                            self._count("n_lock_served", "broker.lock_served")
+                            results[i] = cached
+                            del waiting[i]
+                        elif self.store.try_lock(key):
+                            owned.add(key)
+                            pendings[i] = self._make_pending(queue[i])
+                            del waiting[i]
+                    if not waiting or time.monotonic() >= deadline:
+                        break
+                    time.sleep(self.lock_poll_s)
+                lsp.set(timed_out=len(waiting))
+                for i in waiting:        # wait budget spent: just compute
+                    pendings[i] = self._make_pending(queue[i])
 
         try:
             self._run_pendings(queue, keys, results, pendings, owned)
@@ -691,6 +719,7 @@ class QueryBroker:
                 wants = pend.wants()
                 if not wants:
                     results[i] = pend.result(keys[i])
+                    self._observe_reps(results[i], pend)
                     pend.persist(self.store, keys[i])
                     if keys[i] in owned:
                         self.store.unlock(keys[i])
@@ -726,6 +755,24 @@ class QueryBroker:
                 return
             for bucket in buckets.values():
                 self._dispatch_bucket(bucket, pendings)
+
+    def _observe_reps(self, res, pend) -> None:
+        """Metrics on how much replication an adaptive/paired stopping rule
+        actually spent vs its worst case (``max_reps`` per cell): the 'reps
+        saved by adaptive policies' series the fleet dashboard wants."""
+        pending_q = getattr(pend, "query", None)
+        policy = pending_q.adaptive if pending_q is not None \
+            else pend.pq.policy
+        if policy is None:
+            return
+        used = res.total_reps
+        n_cells = pending_q.n_cells if pending_q is not None \
+            else pend.pq.n_cells
+        arms = 1 if pending_q is not None else 2
+        worst = int(policy.max_reps) * int(n_cells) * arms
+        self.metrics.counter("broker.adaptive_reps").inc(used)
+        self.metrics.counter("broker.adaptive_reps_saved").inc(
+            max(0, worst - used))
 
     def _dispatch_bucket(self, bucket: _Bucket, pendings):
         rows = _concat_rows([r for _, _, r, _ in bucket.members])
@@ -771,15 +818,24 @@ class QueryBroker:
         if budgets is not None and len(padded) > n:
             budgets = np.concatenate(
                 [budgets, np.full(len(padded) - n, eng.INF32, np.int32)])
-        grid = self._dispatch(model, padded, bucket.rp,
-                              backend=bucket.backend, ev_budget=budgets,
-                              reroute=not bucket.explicit)
-        self.n_dispatches += 1
-        self.dispatch_log.append(dict(
+        entry = dict(
             n_queries=len(bucket.members), n_rows=n, n_padded=len(padded),
             backend=bucket.backend, max_events=cap,
             relaxed=bool(self.relax_max_events and len(set(caps)) > 1),
-            sorted=order is not None))
+            sorted=order is not None)
+        with obs.span("broker.dispatch", sig=sig[-16:], **entry):
+            grid = self._dispatch(model, padded, bucket.rp,
+                                  backend=bucket.backend, ev_budget=budgets,
+                                  reroute=not bucket.explicit)
+        self._count("n_dispatches", "broker.dispatches")
+        self.metrics.counter("broker.coalesced_queries").inc(
+            max(0, len(bucket.members) - 1))
+        self.metrics.histogram("broker.rows_per_dispatch").observe(n)
+        if self.dispatch_log.maxlen is not None \
+                and len(self.dispatch_log) == self.dispatch_log.maxlen:
+            self._count("n_dispatch_log_dropped",
+                        "broker.dispatch_log_dropped")
+        self.dispatch_log.append(entry)
         if order is not None:
             inv = np.empty(n, np.int64)
             inv[order] = np.arange(n)

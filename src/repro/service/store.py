@@ -23,6 +23,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import engine as eng
 from repro.core.sweep import GridResult, as_model
 from repro.core.topology import Topology, remote_prob_u32
@@ -156,12 +157,14 @@ class ResultStore:
     def __init__(self, root: Optional[os.PathLike] = None,
                  lru_capacity: int = 128,
                  gc_bytes: Optional[int] = None,
-                 lock_stale_s: float = 300.0):
+                 lock_stale_s: float = 300.0,
+                 metrics: Optional[obs.MetricsRegistry] = None):
         self.root = Path(root) if root is not None else DEFAULT_ROOT
         self.lru_capacity = int(lru_capacity)
         self.gc_bytes = None if gc_bytes is None else int(gc_bytes)
         self.lock_stale_s = float(lock_stale_s)
         self._lru: "OrderedDict[str, GridResult]" = OrderedDict()
+        self.metrics = metrics if metrics is not None else obs.REGISTRY
         self.hits_mem = 0
         self.hits_disk = 0
         self.misses = 0
@@ -170,6 +173,13 @@ class ResultStore:
         self.gc_evictions = 0
         self._disk_total: Optional[int] = None   # running estimate for GC
 
+    def _count(self, name: str, n: int = 1):
+        """Bump both the legacy attribute and the metrics-registry series
+        (``store.<name>``) so old ``stats()`` readers and new ``snapshot()``
+        consumers always agree."""
+        setattr(self, name, getattr(self, name) + n)
+        self.metrics.counter(f"store.{name}").inc(n)
+
     def _path(self, key: str) -> Path:
         return self.root / f"{key}.npz"
 
@@ -177,29 +187,33 @@ class ResultStore:
         return self.root / f"{key}.json"
 
     def get(self, key: str) -> Optional[GridResult]:
-        g = self._lru.get(key)
-        if g is not None:
-            self._lru.move_to_end(key)
-            self.hits_mem += 1
-            # Refresh the disk artifact's mtime on memory hits too: a key
-            # this process serves from its LRU is hot, and must not look
-            # cold to another process's oldest-mtime GC of the shared tier.
-            self._touch(self._path(key))
-            return g
-        path = self._path(key)
-        if path.exists():
-            try:
-                with np.load(path) as d:
-                    g = _grid_from_npz(d)
-            except Exception:
-                self._quarantine(key)
-            else:
-                self._remember(key, g)
-                self.hits_disk += 1
-                self._touch(path)
+        with obs.span("store.get") as sp:
+            g = self._lru.get(key)
+            if g is not None:
+                self._lru.move_to_end(key)
+                self._count("hits_mem")
+                sp.set(tier="mem")
+                # Refresh the disk artifact's mtime on memory hits too: a key
+                # this process serves from its LRU is hot, and must not look
+                # cold to another process's oldest-mtime GC of the shared tier.
+                self._touch(self._path(key))
                 return g
-        self.misses += 1
-        return None
+            path = self._path(key)
+            if path.exists():
+                try:
+                    with np.load(path) as d:
+                        g = _grid_from_npz(d)
+                except Exception:
+                    self._quarantine(key)
+                else:
+                    self._remember(key, g)
+                    self._count("hits_disk")
+                    sp.set(tier="disk")
+                    self._touch(path)
+                    return g
+            self._count("misses")
+            sp.set(tier="miss")
+            return None
 
     def _quarantine(self, key: str):
         """Move an unreadable artifact aside so the key can be recomputed."""
@@ -208,7 +222,7 @@ class ResultStore:
             os.replace(path, path.with_suffix(".corrupt"))
         except OSError:
             pass                   # a concurrent reader may have beaten us
-        self.corrupt += 1
+        self._count("corrupt")
 
     @staticmethod
     def _touch(path: Path):
@@ -231,6 +245,11 @@ class ResultStore:
 
     def put(self, key: str, grid: GridResult,
             meta: Optional[dict] = None) -> Path:
+        with obs.span("store.put") as sp:
+            return self._put(key, grid, meta, sp)
+
+    def _put(self, key: str, grid: GridResult,
+             meta: Optional[dict], sp) -> Path:
         self.root.mkdir(parents=True, exist_ok=True)
         path = self._path(key)
         self._write_atomic(
@@ -239,7 +258,9 @@ class ResultStore:
             blob = json.dumps(meta, sort_keys=True, indent=1).encode()
             self._write_atomic(self._sidecar(key), lambda f: f.write(blob))
         self._remember(key, grid)
-        self.puts += 1
+        self._count("puts")
+        if obs.enabled():          # _entry_bytes stats the files — skip when off
+            sp.set(bytes=self._entry_bytes(key))
         if self.gc_bytes is not None:
             # Amortized budget check: one full directory scan seeds a
             # running byte estimate, each put increments it, and the real
@@ -420,7 +441,7 @@ class ResultStore:
                     pass
             total -= size
             evicted += 1
-        self.gc_evictions += evicted
+        self._count("gc_evictions", evicted)
         self._disk_total = total
         return evicted
 
@@ -456,6 +477,7 @@ class ResultStore:
         return json.loads(path.read_text())
 
     def stats(self) -> dict:
+        self.metrics.gauge("store.lru_len").set(len(self._lru))
         return dict(hits_mem=self.hits_mem, hits_disk=self.hits_disk,
                     misses=self.misses, puts=self.puts,
                     corrupt=self.corrupt, gc_evictions=self.gc_evictions,

@@ -1,0 +1,263 @@
+"""Observability layer (DESIGN.md §9): tracer, metrics registry, service
+instrumentation, ring-bounded dispatch log, last_stats freshness, and the
+artifacts-are-byte-identical-under-tracing guarantee."""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import backend as bk
+from repro.core import topology as T
+from repro.core.sweep import grid_rows, resolve_model, run_rows
+from repro.service import SimulationService
+from repro.service.store import ResultStore
+
+
+# -- tracer ------------------------------------------------------------------
+
+def test_span_nesting_and_summary():
+    with obs.trace_to() as tr:
+        with obs.span("outer", a=1):
+            with obs.span("inner"):
+                pass
+            with obs.span("inner"):
+                pass
+    durs = tr.durations_ms()
+    assert len(durs["outer"]) == 1 and len(durs["inner"]) == 2
+    assert all(d >= 0 for v in durs.values() for d in v)
+    summary = tr.summary()
+    assert "outer" in summary and "inner" in summary
+
+def test_late_attrs_land_on_end_event():
+    with obs.trace_to() as tr:
+        with obs.span("s", early=1) as sp:
+            sp.set(late="x")
+    b, e = tr.events()
+    assert b["ph"] == "B" and b["args"] == {"early": 1}
+    assert e["ph"] == "E" and e["args"] == {"late": "x"}
+
+
+def test_tracer_write_valid_chrome_trace(tmp_path):
+    path = tmp_path / "t.json"
+    with obs.trace_to(path) as tr:
+        with obs.span("a"):
+            with obs.span("b"):
+                pass
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert any(e["ph"] == "M" and e["name"] == "process_name"
+               for e in events)
+    timed = [e for e in events if e["ph"] in ("B", "E")]
+    assert [e["ph"] for e in timed] == ["B", "B", "E", "E"]  # nested pairs
+    ts = [e["ts"] for e in timed]
+    assert ts == sorted(ts)
+
+
+def test_disabled_tracing_is_noop():
+    assert not obs.enabled()
+    sp = obs.span("anything", x=1)
+    assert sp is obs.span("other")          # the shared null span
+    with sp as s:
+        s.set(y=2)                          # all no-ops
+
+
+def test_trace_to_restores_previous_tracer():
+    assert not obs.enabled()
+    with obs.trace_to():
+        assert obs.enabled()
+        with obs.trace_to() as inner:
+            assert obs.get_tracer() is inner
+        assert obs.enabled()                # outer tracer restored
+    assert not obs.enabled()
+
+
+def test_tracer_thread_tids():
+    with obs.trace_to() as tr:
+        def work():
+            with obs.span("worker"):
+                pass
+        with obs.span("main"):
+            th = threading.Thread(target=work)
+            th.start()
+            th.join()
+    tids = {e["tid"] for e in tr.events()}
+    assert len(tids) == 2                   # one track per thread
+    assert tr.durations_ms()["worker"]      # cross-thread pairing intact
+
+
+def test_trace_env_var_activates(tmp_path):
+    """REPRO_WS_TRACE=path enables process-wide tracing; the Chrome-trace
+    JSON lands at exit."""
+    out = tmp_path / "env_trace.json"
+    env = dict(os.environ, REPRO_WS_TRACE=str(out))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(os.path.join(os.path.dirname(__file__), "..", "src")),
+         env.get("PYTHONPATH", "")])
+    code = ("import repro.obs as obs\n"
+            "assert obs.enabled()\n"
+            "with obs.span('from_env'):\n"
+            "    pass\n")
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+    doc = json.loads(out.read_text())
+    assert any(e.get("name") == "from_env" for e in doc["traceEvents"])
+
+
+# -- metrics registry --------------------------------------------------------
+
+def test_counter_gauge_info():
+    reg = obs.MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(4)
+    assert reg.counter("c") is reg.counter("c")      # get-or-create
+    with pytest.raises(ValueError):
+        reg.counter("c").inc(-1)
+    reg.gauge("g").set(2.5)
+    reg.gauge("g").inc(-1.0)
+    reg.info("i").set("jax")
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 5
+    assert snap["gauges"]["g"] == 1.5
+    assert snap["info"]["i"] == "jax"
+
+
+def test_labeled_series_render():
+    reg = obs.MetricsRegistry()
+    reg.counter("runs", {"backend": "jax"}).inc(2)
+    reg.counter("runs", {"backend": "oracle"}).inc()
+    snap = reg.snapshot()["counters"]
+    assert snap["runs{backend=jax}"] == 2
+    assert snap["runs{backend=oracle}"] == 1
+
+
+def test_histogram_buckets():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("h")
+    for x in (1, 3, 100):
+        h.observe(x)
+    d = reg.snapshot()["histograms"]["h"]
+    assert d["count"] == 3 and d["min"] == 1 and d["max"] == 100
+    assert d["mean"] == pytest.approx(104 / 3)
+    assert d["buckets"] == {"1": 1, "4": 1, "128": 1}
+
+
+def test_registry_reset():
+    reg = obs.MetricsRegistry()
+    reg.counter("x").inc()
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "info": {},
+                              "histograms": {}}
+
+
+# -- service integration -----------------------------------------------------
+
+def _small_service(tmp_path, **kw):
+    return SimulationService(root=tmp_path / "store", lock_wait_s=None,
+                             metrics=obs.MetricsRegistry(), **kw)
+
+
+def test_service_metrics_supersede_stats(tmp_path):
+    svc = _small_service(tmp_path)
+    topo = T.one_cluster(4, 3)
+    svc.query(topo, W_list=[500], lam_list=[3], reps=4, backend="oracle")
+    svc.query(topo, W_list=[500], lam_list=[3], reps=4, backend="oracle")
+    s = svc.stats()
+    m = s["metrics"]
+    # every flat broker/store stat is covered by a metrics series
+    assert m["counters"]["broker.queries"] == s["n_queries"] == 2
+    assert m["counters"]["broker.cache_hits"] == s["n_cache_hits"] == 1
+    assert m["counters"]["broker.dispatches"] == s["n_dispatches"] == 1
+    assert m["counters"]["store.puts"] == s["store"]["puts"]
+    assert m["counters"]["store.misses"] == s["store"]["misses"]
+    assert m["counters"]["store.hits_mem"] == s["store"]["hits_mem"]
+    assert m["gauges"]["store.lru_len"] == s["store"]["lru_len"]
+    assert m["gauges"]["broker.history_cells"] == s["n_history_cells"]
+    assert m["info"]["backend.default"] == s["default_backend"]
+    assert m["info"]["engine.version"] == str(s["engine_version"])
+    assert m["gauges"]["backend.n_devices"] == s["n_devices"]
+    # engine/backend series from the global registry are grafted in
+    assert any(k.startswith("backend.run_rows") for k in m["counters"])
+    assert m["histograms"]["broker.rows_per_dispatch"]["count"] == 1
+
+
+def test_service_trace_spans(tmp_path):
+    svc = _small_service(tmp_path)
+    topo = T.one_cluster(8, 5)
+    with obs.trace_to() as tr:
+        svc.query(topo, W_list=[2000], lam_list=[5], reps=40, backend="jax")
+    names = {e["name"] for e in tr.events() if e["ph"] == "B"}
+    assert {"service.query", "broker.flush", "broker.dispatch",
+            "backend.run_rows", "store.get", "store.put"} <= names
+    assert "engine.segment" in names        # 40 rows >= seg_min_rows
+    # dispatch span carries the bucket attributes
+    disp = next(e for e in tr.events()
+                if e["ph"] == "B" and e["name"] == "broker.dispatch")
+    assert disp["args"]["backend"] == "jax"
+    assert disp["args"]["n_rows"] == 40
+    assert disp["args"]["n_padded"] == 64   # pow2 padding
+
+
+def test_artifacts_byte_identical_with_tracing(tmp_path):
+    """Tracing must observe, never perturb: the stored npz artifact is
+    byte-for-byte identical with tracing on vs off."""
+    topo = T.one_cluster(4, 3)
+    kw = dict(W_list=[800], lam_list=[3], reps=40, backend="jax")
+    svc_off = _small_service(tmp_path / "off")
+    svc_off.query(topo, **kw)
+    svc_on = _small_service(tmp_path / "on")
+    with obs.trace_to():
+        svc_on.query(topo, **kw)
+    off = sorted((tmp_path / "off" / "store").glob("*.npz"))
+    on = sorted((tmp_path / "on" / "store").glob("*.npz"))
+    assert len(off) == len(on) == 1
+    assert off[0].name == on[0].name        # same content key
+    assert off[0].read_bytes() == on[0].read_bytes()
+
+
+def test_dispatch_log_ring_buffer(tmp_path):
+    svc = _small_service(tmp_path, dispatch_log_max=2)
+    topo = T.one_cluster(4, 3)
+    for w in (300, 400, 500):               # three distinct dispatches
+        svc.query(topo, W_list=[w], lam_list=[3], reps=4, backend="oracle")
+    log = svc.broker.dispatch_log
+    assert len(log) == 2                    # bounded
+    assert log[0]["n_rows"] == 4            # deque keeps list-style indexing
+    assert svc.broker.n_dispatches == 3
+    assert svc.broker.n_dispatch_log_dropped == 1
+    assert svc.stats()["n_dispatch_log_dropped"] == 1
+    m = svc.stats()["metrics"]["counters"]
+    assert m["broker.dispatch_log_dropped"] == 1
+
+
+def test_dispatch_log_unbounded_opt_out(tmp_path):
+    svc = _small_service(tmp_path, dispatch_log_max=None)
+    assert svc.broker.dispatch_log.maxlen is None
+
+
+def test_last_stats_reset_every_run():
+    """A monolithic run must not report the previous segmented run's
+    telemetry: last_stats is reset at the start of every run_rows."""
+    be = bk.get_backend("jax")
+    topo = T.one_cluster(4, 2)
+    model = resolve_model(topo, "divisible", W_list=[900], lam_list=[2])
+    run_rows(model, grid_rows([900], [2], 48), backend="jax")
+    assert be.last_stats is not None        # 48 rows: segmented path
+    run_rows(model, grid_rows([900], [2], 4), backend="jax", reroute=False)
+    assert be.last_stats is None            # 4 rows: monolithic path
+
+
+def test_adaptive_reps_saved_metric(tmp_path):
+    svc = _small_service(tmp_path)
+    topo = T.one_cluster(4, 3)
+    r = svc.query(topo, W_list=[600], lam_list=[3], ci=0.05,
+                  ci_relative=True, batch_reps=16, max_reps=256,
+                  backend="oracle")
+    assert not r.from_cache
+    m = svc.stats()["metrics"]["counters"]
+    assert m["broker.adaptive_reps"] == r.total_reps
+    assert m["broker.adaptive_reps_saved"] == 256 - r.total_reps
