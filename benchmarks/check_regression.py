@@ -5,7 +5,8 @@ Usage::
 
     python benchmarks/check_regression.py BASELINE.json NEW.json \
         [--threshold 0.2] [--strict] \
-        [--obs-baseline BENCH_obs.json --obs-new BENCH_obs.json]
+        [--obs-baseline BENCH_obs.json --obs-new BENCH_obs.json] \
+        [--fault-baseline BENCH_fault.json --fault-new BENCH_fault.json]
 
 Backends present and available in both files are compared on ``rows_per_s``;
 a drop of more than ``--threshold`` (default 20%) prints a warning (as a
@@ -70,6 +71,24 @@ def compare_wasted(baseline: dict, new: dict, threshold: float) -> list:
     return regressions
 
 
+def compare_fault_latency(baseline: dict, new: dict, threshold: float) -> list:
+    """Return [(rate, old_p99_ms, new_p99_ms, ratio), ...] for every fault
+    rate whose p99 recovered-path query latency (``fault_recovery`` bench,
+    BENCH_fault.json) grew by more than ``threshold``."""
+    old_rates = baseline.get("rates", {})
+    new_rates = new.get("rates", {})
+    regressions = []
+    for rate in sorted(set(old_rates) & set(new_rates), key=float):
+        old_p99 = float(old_rates[rate].get("p99_ms") or 0.0)
+        new_p99 = float(new_rates[rate].get("p99_ms") or 0.0)
+        if old_p99 <= 0.0:
+            continue
+        ratio = new_p99 / old_p99
+        if ratio > 1.0 + threshold:
+            regressions.append((rate, old_p99, new_p99, ratio))
+    return regressions
+
+
 def compare_cache_hits(baseline: dict, new: dict, threshold: float):
     """Return (old_ratio, new_ratio, ratio) when the obs bench's service
     cache-hit ratio dropped by more than ``threshold``, else None."""
@@ -95,6 +114,12 @@ def main(argv=None) -> int:
                     help="baseline BENCH_obs.json (cache-hit-ratio guard)")
     ap.add_argument("--obs-new", type=Path, default=None,
                     help="fresh BENCH_obs.json (cache-hit-ratio guard)")
+    ap.add_argument("--fault-baseline", type=Path, default=None,
+                    help="baseline BENCH_fault.json (recovered-path p99 "
+                         "latency guard)")
+    ap.add_argument("--fault-new", type=Path, default=None,
+                    help="fresh BENCH_fault.json (recovered-path p99 "
+                         "latency guard)")
     args = ap.parse_args(argv)
 
     for path in (args.baseline, args.new):
@@ -148,7 +173,26 @@ def main(argv=None) -> int:
             print("check_regression: obs bench file missing; "
                   "skipping cache-hit-ratio guard")
 
-    any_regression = bool(regressions or wasted or cache_reg)
+    fault_regs = []
+    if args.fault_baseline and args.fault_new:
+        if args.fault_baseline.exists() and args.fault_new.exists():
+            fault_regs = compare_fault_latency(
+                json.loads(args.fault_baseline.read_text()),
+                json.loads(args.fault_new.read_text()), args.threshold)
+            for rate, old_p99, new_p99, ratio in fault_regs:
+                print(f"{warn}fault_recovery p99 latency at "
+                      f"{float(rate):.0%} faults regressed "
+                      f"{old_p99:.1f}ms -> {new_p99:.1f}ms "
+                      f"({ratio:.0%} of baseline, "
+                      f"threshold {1 + args.threshold:.0%})")
+            if not fault_regs:
+                print(f"check_regression: no fault-recovery p99 latency "
+                      f"regression > {args.threshold:.0%}")
+        else:
+            print("check_regression: fault bench file missing; "
+                  "skipping recovered-path latency guard")
+
+    any_regression = bool(regressions or wasted or cache_reg or fault_regs)
     return 1 if (any_regression and args.strict) else 0
 
 

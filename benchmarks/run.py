@@ -23,6 +23,9 @@ artifacts/bench/). Figures:
                          disabled throughput (<3% target) + cache-hit-ratio
                          trajectory, emitted as artifacts/bench/BENCH_obs.json
                          (+ obs_trace.json / obs_metrics.json CI artifacts)
+  fault_recovery         p50/p99 query latency at 0/5/20% injected backend
+                         failure rate (retry + bisection salvage + fallback
+                         chain), emitted as artifacts/bench/BENCH_fault.json
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -586,6 +589,71 @@ def obs_overhead(reps: int):
          f" target <3%); cache_hit_ratio={hit_ratio}")
 
 
+def fault_recovery(reps: int):
+    """Query latency under injected backend faults (DESIGN.md §10): p50/p99
+    per-query service latency at 0% / 5% / 20% per-row backend failure rate
+    (``per_row`` faults on the jax backend; poisoned rows fail on every
+    retry, forcing bisection salvage + oracle fallback). Emits
+    BENCH_fault.json with the recovery counters so check_regression.py can
+    guard the recovered-path latency like any other perf series. The 0% row
+    doubles as the clean-path overhead control: the resilience layer on a
+    healthy dispatch is one extra function frame."""
+    import shutil
+    import tempfile
+    from repro import obs
+    from repro.service import SimulationService
+    from repro.service import resilience as rz
+
+    p, W = 8, 20_000
+    topo = one_cluster(p, 1)
+    n_q = max(3 * reps, 48)
+    cfg = rz.ResilienceConfig(
+        retry=rz.RetryPolicy(max_attempts=1, base_s=0.0, cap_s=0.0),
+        breaker_failures=1 << 30)   # keep bisecting instead of tripping
+    out_rows = []
+    per_rate = {}
+    for rate in (0.0, 0.05, 0.20):
+        plan = rz.FaultPlan(rng_seed=11, sites={
+            "backend.run_rows": rz.Prob(rate, kind="raise", per_row=True,
+                                        match={"backend": "jax"})})
+        tmp = tempfile.mkdtemp(prefix="bench_fault_")
+        reg = obs.MetricsRegistry()
+        svc = SimulationService(root=tmp, metrics=reg, resilience=cfg)
+        mk = lambda s: svc.make_query(topo, W_list=[W], lam_list=[3],
+                                      reps=1, seed0=s, backend="jax")
+        with rz.fault_plan(rz.no_faults()):
+            svc.query_many([mk(0)])          # compile warm-up, fault-free
+        lats = []
+        with rz.fault_plan(plan):
+            for s in range(1, n_q + 1):      # one query per flush: the
+                t0 = time.time()             # latency a single caller sees
+                svc.query_many([mk(s)])
+                lats.append((time.time() - t0) * 1e3)
+        deg = svc.stats()["degraded"]
+        shutil.rmtree(tmp, ignore_errors=True)
+        entry = dict(
+            fault_rate=rate, n_queries=n_q,
+            p50_ms=round(float(np.percentile(lats, 50)), 3),
+            p99_ms=round(float(np.percentile(lats, 99)), 3),
+            retries=int(deg["retries"]), fallbacks=int(deg["fallbacks"]),
+            salvaged_rows=int(deg["salvaged_rows"]),
+            dispatch_failures=int(deg["dispatch_failures"]))
+        out_rows.append(entry)
+        per_rate[f"{rate:g}"] = entry
+    _write_csv("fault_recovery", out_rows)
+    BENCH.mkdir(parents=True, exist_ok=True)
+    from repro.core import engine as _eng
+    with open(BENCH / "BENCH_fault.json", "w") as f:
+        json.dump({"engine_version": _eng.ENGINE_VERSION,
+                   "workload": dict(p=p, W=W, n_queries=n_q),
+                   "rates": per_rate}, f, indent=1, sort_keys=True)
+    clean, worst = per_rate["0"], per_rate["0.2"]
+    _row("fault_recovery", worst["p99_ms"] * 1e3,
+         f"p99 {clean['p99_ms']:.1f}ms@0% -> {worst['p99_ms']:.1f}ms@20% "
+         f"({worst['fallbacks']} fallbacks, {worst['retries']} retries, "
+         f"0 client errors)")
+
+
 def roofline(_reps: int):
     """Aggregate the dry-run artifacts into the §Roofline table."""
     cells = sorted((ART / "dryrun").glob("*.json"))
@@ -649,6 +717,7 @@ def main():
         "paired_comparison": lambda: paired_comparison(reps),
         "backend_matrix": lambda: backend_matrix(reps),
         "obs_overhead": lambda: obs_overhead(reps),
+        "fault_recovery": lambda: fault_recovery(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

@@ -55,6 +55,19 @@ SEG_LEN_ENV = "REPRO_WS_SEG_LEN"
 #: (:func:`enable_compile_cache`).
 JIT_CACHE_ENV = "REPRO_WS_JIT_CACHE"
 
+_fault_point_impl = None
+
+
+def _fault_point(site: str, **ctx):
+    """Lazy bridge to ``repro.service.resilience.fault_point`` — imported on
+    first use so ``repro.core`` keeps no module-level dependency on the
+    service layer (the service imports core, not vice versa)."""
+    global _fault_point_impl
+    if _fault_point_impl is None:
+        from repro.service.resilience import fault_point
+        _fault_point_impl = fault_point
+    return _fault_point_impl(site, **ctx)
+
 
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
@@ -141,6 +154,11 @@ class ExecutionBackend:
         """
         model = sw.as_model(model)
         self._check(model)
+        # Chaos hook (repro.service.resilience): a process-global FaultPlan
+        # may raise/hang here to simulate backend failure or device loss;
+        # the broker's resilient dispatch recovers. No-op without a plan.
+        _fault_point("backend.run_rows", backend=self.name,
+                     n_rows=len(rows), row_seeds=np.asarray(rows.seed))
         self.n_run_rows += 1
         # Reset before (not after) running: last_stats always describes THIS
         # dispatch, so a monolithic run cannot leak the previous segmented

@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_mod
+from repro.service import resilience as rz
 
 
 class InjectedFailure(RuntimeError):
@@ -31,14 +32,20 @@ class InjectedFailure(RuntimeError):
 @dataclasses.dataclass
 class FailureInjector:
     """Deterministically raise at given steps (once each) — simulated node
-    failures for tests/examples."""
+    failures for tests/examples. Thin wrapper over the general fault-injection
+    layer (:mod:`repro.service.resilience`): the steps become an ``At`` spec
+    on the ``train.step`` site, so training chaos and service chaos share one
+    engine (and one ``REPRO_WS_FAULT_PLAN`` story)."""
     fail_at: tuple = ()
-    _fired: set = dataclasses.field(default_factory=set)
+
+    def __post_init__(self):
+        sites = {}
+        if self.fail_at:
+            sites["train.step"] = rz.At(*self.fail_at, exc=InjectedFailure)
+        self._plan = rz.FaultPlan(rng_seed=0, sites=sites)
 
     def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self._fired:
-            self._fired.add(step)
-            raise InjectedFailure(f"injected node failure at step {step}")
+        self._plan.fire("train.step", {"index": step})
 
 
 @dataclasses.dataclass

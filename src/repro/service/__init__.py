@@ -14,6 +14,11 @@ replication driven by a precision target instead of a fixed rep count
 (``estimator``). ``api.SimulationService`` is the facade callers use.
 """
 from repro.service.api import SimulationService  # noqa: F401
+from repro.service.resilience import (  # noqa: F401
+    At, CircuitBreaker, FaultPlan, FaultSpec, InjectedFault, Prob,
+    ResilienceConfig, RetryPolicy, fallback_chain, fault_plan, fault_point,
+    install, no_faults,
+)
 from repro.service.broker import (  # noqa: F401
     PairedQuery, PairedResult, QueryBroker, QueryResult, SimQuery,
 )

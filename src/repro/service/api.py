@@ -26,6 +26,7 @@ from repro.service.broker import (PairedQuery, PairedResult, QueryBroker,
                                   QueryResult, SimQuery)
 from repro.service.estimator import (AdaptivePolicy, PairedPolicy,
                                      QuantilePolicy)
+from repro.service import resilience as rz
 from repro.service import store as store_mod
 from repro.service.store import ResultStore
 
@@ -44,7 +45,8 @@ class SimulationService:
                  straggler_sort: bool = True,
                  compile_cache: Union[None, bool, str, os.PathLike] = None,
                  dispatch_log_max: Optional[int] = 1024,
-                 metrics: Optional[obs.MetricsRegistry] = None):
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 resilience: Optional[rz.ResilienceConfig] = None):
         from repro.core import backend as bk_mod
         self.metrics = metrics if metrics is not None else obs.REGISTRY
         self.store = store if store is not None else ResultStore(
@@ -58,7 +60,8 @@ class SimulationService:
                                   lock_wait_s=lock_wait_s,
                                   straggler_sort=straggler_sort,
                                   dispatch_log_max=dispatch_log_max,
-                                  metrics=self.metrics)
+                                  metrics=self.metrics,
+                                  resilience=resilience)
         self.confidence = float(confidence)
         # Opt-in persistent XLA compilation cache: None defers to the
         # REPRO_WS_JIT_CACHE env var, True uses the default
@@ -251,4 +254,5 @@ class SimulationService:
                     compile_cache=str(self.compile_cache_dir)
                     if self.compile_cache_dir else None,
                     engine_version=eng.ENGINE_VERSION,
+                    degraded=rz.degraded_summary(m),
                     metrics=snapshot)

@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import random
 import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -55,6 +56,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import backend as bk
+from repro.service import resilience as rz
 from repro.core import engine as eng
 from repro.core.sweep import (GridResult, GridRows, canonical_grid,
                               concat_grids, grid_rows, run_rows)
@@ -536,16 +538,28 @@ class QueryBroker:
                  relax_max_events: bool = True,
                  lock_wait_s: Optional[float] = 60.0,
                  lock_poll_s: float = 0.05,
+                 lock_poll_cap_s: float = 0.5,
                  straggler_sort: bool = True,
                  dispatch_log_max: Optional[int] = 1024,
-                 metrics: Optional[obs.MetricsRegistry] = None):
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 resilience: Optional[rz.ResilienceConfig] = None):
         self.store = store if store is not None else ResultStore()
         self.pad_pow2 = pad_pow2
         self.confidence = float(confidence)
         self.relax_max_events = bool(relax_max_events)
         self.lock_wait_s = lock_wait_s if lock_wait_s is None \
             else float(lock_wait_s)
+        # Lock polling backs off with decorrelated jitter from lock_poll_s
+        # up to lock_poll_cap_s, so N waiters on a hot key spread out
+        # instead of stat()ing the store in phase.
         self.lock_poll_s = float(lock_poll_s)
+        self.lock_poll_cap_s = float(lock_poll_cap_s)
+        # Self-healing dispatch config (retry / fallback chain / breaker /
+        # bisection salvage); ResilienceConfig(enabled=False) restores the
+        # raise-through behaviour.
+        self.resilience = resilience if resilience is not None \
+            else rz.ResilienceConfig()
+        self._breaker = self.resilience.make_breaker(metrics)
         # Straggler-aware dispatch: order a bucket's rows by expected event
         # count before running (results are un-permuted before fan-back, so
         # answers and stored artifacts are byte-identical either way).
@@ -678,7 +692,10 @@ class QueryBroker:
         if waiting:
             with obs.span("broker.lock_wait", n_keys=len(waiting)) as lsp:
                 deadline = time.monotonic() + self.lock_wait_s
+                rng = random.Random()
+                sleep_s = self.lock_poll_s
                 while waiting:
+                    self.metrics.counter("broker.lock_polls").inc()
                     for i in list(waiting):
                         key = waiting[i]
                         cached = self._from_cache(queue[i], key)
@@ -688,12 +705,19 @@ class QueryBroker:
                             results[i] = cached
                             del waiting[i]
                         elif self.store.try_lock(key):
+                            # Lock freed — or its holder died and try_lock
+                            # broke the wreck. Either way we take over.
                             owned.add(key)
                             pendings[i] = self._make_pending(queue[i])
                             del waiting[i]
                     if not waiting or time.monotonic() >= deadline:
                         break
-                    time.sleep(self.lock_poll_s)
+                    # Decorrelated jitter keeps concurrent waiters from
+                    # polling the store in lockstep.
+                    time.sleep(min(sleep_s,
+                                   max(0.0, deadline - time.monotonic())))
+                    sleep_s = rz.decorrelated_jitter(
+                        sleep_s, self.lock_poll_s, self.lock_poll_cap_s, rng)
                 lsp.set(timed_out=len(waiting))
                 for i in waiting:        # wait budget spent: just compute
                     pendings[i] = self._make_pending(queue[i])
@@ -711,6 +735,11 @@ class QueryBroker:
 
     def _run_pendings(self, queue, keys, results, pendings, owned):
         while True:
+            # Heartbeat our advisory locks once per dispatch round so
+            # cross-process waiters see a live mtime and keep waiting
+            # instead of declaring us dead mid-computation.
+            for key in owned:
+                self.store.heartbeat(key)
             # (canonical static config, rp, backend) -> coalesced dispatch
             buckets: Dict[Tuple[str, int, str], _Bucket] = {}
             for i, pend in pendings.items():
@@ -823,10 +852,30 @@ class QueryBroker:
             backend=bucket.backend, max_events=cap,
             relaxed=bool(self.relax_max_events and len(set(caps)) > 1),
             sorted=order is not None)
+        cfg = self.resilience
+        if cfg.enabled and cfg.fallback and self._mesh is None:
+            chain = rz.fallback_chain(bucket.backend, model)
+        else:
+            # Mesh-sharded dispatch pins the backend (row sharding needs
+            # jax); no cross-backend demotion in that mode.
+            chain = [bucket.backend]
+
+        def call(rws, buds, bname, top):
+            rz.fault_point("broker.dispatch", backend=bname, n_rows=len(rws))
+            return self._dispatch(model, rws, bucket.rp, backend=bname,
+                                  ev_budget=buds,
+                                  reroute=(not bucket.explicit) and top)
+
         with obs.span("broker.dispatch", sig=sig[-16:], **entry):
-            grid = self._dispatch(model, padded, bucket.rp,
-                                  backend=bucket.backend, ev_budget=budgets,
-                                  reroute=not bucket.explicit)
+            if cfg.enabled:
+                grid, degraded = rz.dispatch_resilient(
+                    call, padded, budgets, chain, retry=cfg.retry,
+                    breaker=self._breaker, metrics=self.metrics,
+                    salvage=cfg.salvage)
+            else:
+                grid, degraded = call(padded, budgets, bucket.backend,
+                                      True), False
+        entry["degraded"] = degraded
         self._count("n_dispatches", "broker.dispatches")
         self.metrics.counter("broker.coalesced_queries").inc(
             max(0, len(bucket.members) - 1))

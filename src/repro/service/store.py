@@ -27,6 +27,7 @@ from repro import obs
 from repro.core import engine as eng
 from repro.core.sweep import GridResult, as_model
 from repro.core.topology import Topology, remote_prob_u32
+from repro.service import resilience as rz
 
 #: Default disk tier location: <repo>/artifacts/store.
 DEFAULT_ROOT = Path(__file__).resolve().parents[3] / "artifacts" / "store"
@@ -158,11 +159,17 @@ class ResultStore:
                  lru_capacity: int = 128,
                  gc_bytes: Optional[int] = None,
                  lock_stale_s: float = 300.0,
-                 metrics: Optional[obs.MetricsRegistry] = None):
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 retry: Optional[rz.RetryPolicy] = None):
         self.root = Path(root) if root is not None else DEFAULT_ROOT
         self.lru_capacity = int(lru_capacity)
         self.gc_bytes = None if gc_bytes is None else int(gc_bytes)
         self.lock_stale_s = float(lock_stale_s)
+        # Transient-I/O retry (full-jitter backoff) wrapped around disk reads
+        # and the atomic artifact write; a fault that outlives the budget
+        # degrades to the pre-existing behaviour (miss / raise).
+        self.retry = retry if retry is not None else rz.RetryPolicy(
+            max_attempts=3, base_s=0.01, cap_s=0.25, deadline_s=10.0)
         self._lru: "OrderedDict[str, GridResult]" = OrderedDict()
         self.metrics = metrics if metrics is not None else obs.REGISTRY
         self.hits_mem = 0
@@ -171,6 +178,7 @@ class ResultStore:
         self.puts = 0
         self.corrupt = 0
         self.gc_evictions = 0
+        self.locks_broken = 0
         self._disk_total: Optional[int] = None   # running estimate for GC
 
     def _count(self, name: str, n: int = 1):
@@ -200,9 +208,14 @@ class ResultStore:
                 return g
             path = self._path(key)
             if path.exists():
-                try:
+                def _load():
+                    rz.fault_point("store.get", key=key)
                     with np.load(path) as d:
-                        g = _grid_from_npz(d)
+                        return _grid_from_npz(d)
+                try:
+                    g = self.retry.call(_load, retry_on=(OSError,),
+                                        metrics=self.metrics,
+                                        label="store.get")
                 except Exception:
                     self._quarantine(key)
                 else:
@@ -252,8 +265,23 @@ class ResultStore:
              meta: Optional[dict], sp) -> Path:
         self.root.mkdir(parents=True, exist_ok=True)
         path = self._path(key)
-        self._write_atomic(
-            path, lambda f: np.savez_compressed(f, **_grid_to_npz(grid)))
+
+        def _write():
+            # Fault site: "oserror"/"raise" simulate a failed write (retried
+            # with backoff); "torn_write"/"bit_flip" return an action applied
+            # AFTER the atomic write — the on-disk artifact is corrupted the
+            # way a crashed writer / flaky disk would leave it, while this
+            # process's LRU keeps the good copy (readers recover via
+            # quarantine + recompute).
+            act = rz.fault_point("store.put", key=key)
+            self._write_atomic(
+                path, lambda f: np.savez_compressed(f, **_grid_to_npz(grid)))
+            return act
+
+        action = self.retry.call(_write, retry_on=(OSError,),
+                                 metrics=self.metrics, label="store.put")
+        if action:
+            self._corrupt_in_place(path, action)
         if meta is not None:
             blob = json.dumps(meta, sort_keys=True, indent=1).encode()
             self._write_atomic(self._sidecar(key), lambda f: f.write(blob))
@@ -283,51 +311,160 @@ class ResultStore:
     def contains(self, key: str) -> bool:
         return key in self._lru or self._path(key).exists()
 
+    def _corrupt_in_place(self, path: Path, action: str):
+        """Apply an injected corruption to a landed artifact: ``torn_write``
+        truncates it mid-file (a crashed writer on a non-atomic filesystem),
+        ``bit_flip`` flips one byte (silent media corruption)."""
+        try:
+            size = path.stat().st_size
+            if action == "torn_write":
+                with open(path, "r+b") as f:
+                    f.truncate(max(size // 2, 1))
+            elif action == "bit_flip" and size:
+                with open(path, "r+b") as f:
+                    f.seek(size // 2)
+                    b = f.read(1)
+                    f.seek(size // 2)
+                    f.write(bytes([b[0] ^ 0xFF]) if b else b"\xff")
+        except OSError:
+            pass
+
     # -- advisory key locks (cross-process in-flight dedup) ------------------
 
     def _lock_path(self, key: str) -> Path:
         return self.root / f"{key}.lock"
 
-    def try_lock(self, key: str) -> bool:
+    @staticmethod
+    def _lock_holder(path: Path):
+        """(pid, host) recorded in a lock file, or None when unreadable
+        (mid-write, foreign format, or gone)."""
+        try:
+            parts = path.read_text().split()
+            return int(parts[0]), parts[1]
+        except (OSError, ValueError, IndexError):
+            return None
+
+    @classmethod
+    def _holder_dead(cls, path: Path) -> bool:
+        """True iff the lock names a holder on THIS host whose pid no longer
+        runs — wreckage of a crashed process, breakable immediately instead
+        of after ``lock_stale_s``. Unreadable/foreign locks are presumed
+        live (age-based staleness still applies to them)."""
+        holder = cls._lock_holder(path)
+        if holder is None or holder[1] != os.uname().nodename:
+            return False
+        try:
+            os.kill(holder[0], 0)
+        except ProcessLookupError:
+            return True
+        except OSError:
+            pass
+        return False
+
+    def _break_lock(self, path: Path, st) -> bool:
+        """Break the observed (stale or dead-holder) lock; True iff WE broke
+        it and may deterministically re-acquire. Breaking is serialized by a
+        per-key *break mutex* (``.lock-break``, itself ``O_EXCL``): the one
+        breaker holding it re-verifies under the mutex that the lock on disk
+        is still the stale one it judged (same inode — not a fresh lock a
+        faster winner already re-created), and only then unlinks it. Every
+        loser returns False and re-polls, so of N concurrent breakers at
+        most one ever proceeds to the ``O_EXCL`` re-acquire and a winner's
+        fresh lock is never collateral damage. A break mutex whose owner
+        crashed is cleared by age."""
+        brk = path.with_suffix(".lock-break")
+        try:
+            bfd = os.open(brk, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            # Another breaker holds the mutex. Clear it if ITS owner died
+            # mid-break (crashed breaker), then re-poll either way.
+            try:
+                if time.time() - brk.stat().st_mtime > \
+                        max(5.0, self.lock_stale_s):
+                    os.unlink(brk)
+            except OSError:
+                pass
+            return False
+        except OSError:
+            return False
+        try:
+            os.close(bfd)
+            try:
+                cur = path.stat()
+            except OSError:
+                return True           # lock vanished: free to re-acquire
+            if cur.st_ino != st.st_ino:
+                return False          # fresh lock from a new winner: abort
+            try:
+                os.unlink(path)
+            except OSError:
+                return False
+            self._count("locks_broken")
+            return True
+        finally:
+            try:
+                os.unlink(brk)
+            except OSError:
+                pass
+
+    def try_lock(self, key: str, break_dead: bool = True) -> bool:
         """Best-effort advisory lock on a key: True iff this process now
         holds it. ``O_CREAT | O_EXCL`` is atomic on POSIX (incl. NFSv3+ for
         regular files), so of N processes about to compute the same key,
         one wins and the rest poll the store instead (see the broker's
-        flush). A lock older than ``lock_stale_s`` is wreckage from a dead
-        writer and is broken. Purely an optimization: correctness never
-        depends on the lock — a process that cannot get it may still
-        compute (the store write is atomic and idempotent)."""
+        flush).
+
+        The lock file records ``pid host timestamp``; its mtime is the
+        holder's heartbeat (:meth:`heartbeat`). A lock is breakable when it
+        is older than ``lock_stale_s`` (no heartbeat that long = presumed
+        dead anywhere) or — with ``break_dead`` — the moment its holder pid
+        stops running on this host, so waiters recover from a crashed
+        holder in seconds, not minutes. Breaking is deterministic: the one
+        process whose rename-away of the old lock succeeds re-acquires via
+        ``O_EXCL``; every loser returns False and re-polls. Purely an
+        optimization: correctness never depends on the lock — a process
+        that cannot get it may still compute (the store write is atomic and
+        idempotent)."""
         self.root.mkdir(parents=True, exist_ok=True)
         path = self._lock_path(key)
-        for attempt in range(2):      # second pass after breaking a stale lock
+        broke = False
+        for _ in range(3):
             try:
                 fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
             except FileExistsError:
+                if broke:
+                    # We broke the old lock but someone else O_EXCL'd the
+                    # path before our re-acquire: their lock is fresh.
+                    return False
                 try:
-                    age = time.time() - path.stat().st_mtime
+                    st = path.stat()
                 except OSError:
                     continue          # holder just released it; retry
-                if age < self.lock_stale_s:
+                age = time.time() - st.st_mtime
+                if age < self.lock_stale_s and not (
+                        break_dead and self._holder_dead(path)):
                     return False
-                # Stale: break it by atomic rename-away, not unlink — of N
-                # waiters observing the same stale file exactly one rename
-                # succeeds, so no waiter can ever delete a *fresh* lock
-                # another waiter just created in its place.
-                wreck = path.with_suffix(f".lock-stale.{os.getpid()}.tmp")
-                try:
-                    os.rename(path, wreck)
-                except OSError:
-                    pass              # another waiter broke it first
-                else:
-                    try:
-                        os.unlink(wreck)
-                    except OSError:
-                        pass
-                continue
+                if not self._break_lock(path, st):
+                    return False      # another breaker is the winner
+                broke = True
+                continue              # we won the break: O_EXCL re-acquire
             with os.fdopen(fd, "w") as f:
-                f.write(f"{os.getpid()} {time.time():.3f}")
+                f.write(f"{os.getpid()} {os.uname().nodename} "
+                        f"{time.time():.3f}")
+            # Chaos hook: kind="exit" simulates a holder crashing right
+            # after acquiring (waiters must detect the dead pid and break).
+            rz.fault_point("store.lock.acquired", key=key)
             return True
         return False
+
+    def heartbeat(self, key: str):
+        """Refresh a held lock's mtime so long computations are not broken
+        as stale by age (the holder's liveness signal for foreign hosts;
+        same-host waiters also see the pid directly)."""
+        try:
+            os.utime(self._lock_path(key))
+        except OSError:
+            pass
 
     def unlock(self, key: str):
         try:
@@ -335,13 +472,20 @@ class ResultStore:
         except OSError:
             pass
 
-    def lock_held(self, key: str) -> bool:
-        """A *fresh* lock file exists (some live process is computing)."""
+    def lock_live(self, key: str) -> bool:
+        """The key's lock exists, is younger than ``lock_stale_s``, and its
+        holder is not a dead same-host pid — i.e. some live process really
+        is computing this key. GC must not evict such a key's artifact."""
+        path = self._lock_path(key)
         try:
-            age = time.time() - self._lock_path(key).stat().st_mtime
+            age = time.time() - path.stat().st_mtime
         except OSError:
             return False
-        return age < self.lock_stale_s
+        return age < self.lock_stale_s and not self._holder_dead(path)
+
+    def lock_held(self, key: str) -> bool:
+        """A *fresh* lock file exists (some live process is computing)."""
+        return self.lock_live(key)
 
     def clear_memory(self):
         """Drop the in-process tier (the disk tier keeps serving)."""
@@ -383,22 +527,26 @@ class ResultStore:
 
     def _junk_entries(self) -> list:
         """(path, bytes) of quarantined ``.corrupt`` files, stale ``.tmp``
-        wreckage and stale ``.lock`` files — junk that must count against
+        wreckage and dead ``.lock`` files — junk that must count against
         the byte budget (it lives in the tier) and that GC deletes before
-        touching real artifacts."""
+        touching real artifacts. A lock is junk when it aged past
+        ``lock_stale_s`` OR its same-host holder pid is dead; a *live*
+        lock is never junk."""
         out = []
         if not self.root.is_dir():
             return out
         now = time.time()
         for pattern, min_age in (("*.corrupt", 0.0),
                                  ("*.tmp", self._TMP_STALE_S),
-                                 ("*.lock", self.lock_stale_s)):
+                                 ("*.lock", self.lock_stale_s),
+                                 ("*.lock-break", self._TMP_STALE_S)):
             for path in self.root.glob(pattern):
                 try:
                     st = path.stat()
                 except OSError:
                     continue
-                if now - st.st_mtime >= min_age:
+                if now - st.st_mtime >= min_age or (
+                        pattern == "*.lock" and self._holder_dead(path)):
                     out.append((path, st.st_size))
         return out
 
@@ -434,6 +582,10 @@ class ResultStore:
         for key, size, _ in entries:
             if total <= budget:
                 break
+            if self.lock_live(key):
+                # A live lock marks an in-flight computation (a waiter may
+                # be about to serve this key): never evict under it.
+                continue
             for p in (self._path(key), self._sidecar(key)):
                 try:
                     os.unlink(p)
@@ -481,4 +633,5 @@ class ResultStore:
         return dict(hits_mem=self.hits_mem, hits_disk=self.hits_disk,
                     misses=self.misses, puts=self.puts,
                     corrupt=self.corrupt, gc_evictions=self.gc_evictions,
+                    locks_broken=self.locks_broken,
                     lru_len=len(self._lru))
