@@ -102,6 +102,26 @@ def compare_cache_hits(baseline: dict, new: dict, threshold: float):
     return None
 
 
+def compare_sanitizer(baseline: dict, new: dict) -> list:
+    """Return warning strings for the ``sanitizer_overhead`` bench
+    (BENCH_check.json): armed overhead above the 5% budget, or any
+    sanitizer violation during the bench (the bench workload must always
+    be invariant-clean)."""
+    warnings = []
+    new_over = new.get("overhead_frac")
+    if new_over is not None and float(new_over) > 0.05:
+        old_over = baseline.get("overhead_frac")
+        vs = (f" (baseline {float(old_over):.1%})"
+              if old_over is not None else "")
+        warnings.append(f"sanitizer overhead {float(new_over):.1%} exceeds "
+                        f"the 5% budget{vs}")
+    viol = int(new.get("violations_total") or 0)
+    if viol:
+        warnings.append(f"sanitizer reported {viol} invariant violation(s) "
+                        f"on the clean bench workload")
+    return warnings
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", type=Path)
@@ -120,6 +140,11 @@ def main(argv=None) -> int:
     ap.add_argument("--fault-new", type=Path, default=None,
                     help="fresh BENCH_fault.json (recovered-path p99 "
                          "latency guard)")
+    ap.add_argument("--check-baseline", type=Path, default=None,
+                    help="baseline BENCH_check.json (sanitizer overhead "
+                         "guard)")
+    ap.add_argument("--check-new", type=Path, default=None,
+                    help="fresh BENCH_check.json (sanitizer overhead guard)")
     args = ap.parse_args(argv)
 
     for path in (args.baseline, args.new):
@@ -192,7 +217,23 @@ def main(argv=None) -> int:
             print("check_regression: fault bench file missing; "
                   "skipping recovered-path latency guard")
 
-    any_regression = bool(regressions or wasted or cache_reg or fault_regs)
+    san_warns = []
+    if args.check_baseline and args.check_new:
+        if args.check_baseline.exists() and args.check_new.exists():
+            san_warns = compare_sanitizer(
+                json.loads(args.check_baseline.read_text()),
+                json.loads(args.check_new.read_text()))
+            for w in san_warns:
+                print(f"{warn}{w}")
+            if not san_warns:
+                print("check_regression: sanitizer overhead within the 5% "
+                      "budget, no violations")
+        else:
+            print("check_regression: check bench file missing; "
+                  "skipping sanitizer overhead guard")
+
+    any_regression = bool(regressions or wasted or cache_reg or fault_regs
+                          or san_warns)
     return 1 if (any_regression and args.strict) else 0
 
 

@@ -298,10 +298,11 @@ def service_throughput(reps: int):
     # bucket (θ is a traced scenario field), so the broker coalesces them
     # into a single device program — the planner's access pattern.
     thetas = ((0, 0), (0, 2), (8, 0), (16, 2))
-    make = lambda: [svc.make_query(one_cluster(p, 1), W_list=[W],
-                                   lam_list=list(lams), theta=(th,),
-                                   reps=reps, seed0=11)
-                    for th in thetas]
+    def make():
+        return [svc.make_query(one_cluster(p, 1), W_list=[W],
+                               lam_list=list(lams), theta=(th,),
+                               reps=reps, seed0=11)
+                for th in thetas]
     t0 = time.time()
     svc.query_many(make())                      # compile + simulate
     cold_s = time.time() - t0
@@ -452,7 +453,8 @@ def backend_matrix(reps: int):
         rows_b = rows.slice(0, interp_n) if name == "pallas_interpret" \
             else rows
         nb = len(rows_b)
-        run = lambda: run_rows(model, rows_b, backend=name, reroute=False)
+        def run():
+            return run_rows(model, rows_b, backend=name, reroute=False)
         run()                                # compile + warm
         t0 = time.time()
         g = run()
@@ -528,7 +530,8 @@ def obs_overhead(reps: int):
     rows = grid_rows([W], lams, n_reps)
     model = resolve_model(topo, "divisible", W_list=[W], lam_list=lams,
                           pow2_max_events=True)
-    run = lambda: run_rows(model, rows, backend="jax", reroute=False)
+    def run():
+        return run_rows(model, rows, backend="jax", reroute=False)
     run()                                    # compile + warm
 
     def timed() -> float:
@@ -589,6 +592,94 @@ def obs_overhead(reps: int):
          f" target <3%); cache_hit_ratio={hit_ratio}")
 
 
+def sanitizer_overhead(reps: int):
+    """Cost of the determinism sanitizer (repro.check.sanitizer) on the
+    ``obs_overhead`` workload: armed (replay 1/16, 2 rows) vs disarmed
+    throughput on the jax backend. Target: <5% overhead armed — the probes
+    are numpy reductions at segment/dispatch boundaries plus an amortized
+    2-row oracle replay. seed0 is chosen so the dispatch IS in the 1-in-16
+    replay sample (xor-folded seeds), so the measured cost includes the
+    replay, not just the cheap probes. Emits BENCH_check.json for the
+    check_regression.py warn-only guard."""
+    from repro.check import sanitizer as san
+    from repro.core.sweep import grid_rows, resolve_model, run_rows
+
+    p, W, lams = 16, 30_000, (2, 6, 20)
+    n_reps = max(reps + 6, 22)
+    topo = one_cluster(p, 1)
+    denom = 16
+
+    def _sampled(cand) -> bool:
+        seeds = np.asarray(cand.seed, dtype=np.uint32)
+        return int(np.bitwise_xor.reduce(seeds)) % denom == 0
+
+    # The production cost is amortized: 1 dispatch in ``denom`` replays.
+    # Time a ``denom``-dispatch workload containing exactly one sampled
+    # dispatch, so the measured overhead includes the replay at exactly
+    # its real rate. The xor-fold residue class depends on the row count
+    # as much as on seed0 (seeds are structured), so the sampled grid is
+    # searched over a few widths too.
+    grids = [grid_rows([W], lams, n_reps, seed0=s)
+             for s in range(1, denom + 1)]
+    if not any(_sampled(g) for g in grids):
+        hit = None
+        for nr in range(n_reps, n_reps + 4):
+            for seed0 in range(1, 65):
+                cand = grid_rows([W], lams, nr, seed0=seed0)
+                if _sampled(cand):
+                    hit = cand
+                    break
+            if hit is not None:
+                break
+        if hit is not None:
+            grids[0] = hit
+    n_rows_total = sum(len(g) for g in grids)
+    model = resolve_model(topo, "divisible", W_list=[W], lam_list=lams,
+                          pow2_max_events=True)
+
+    def timed() -> float:
+        t0 = time.time()
+        for g in grids:
+            run_rows(model, g, backend="jax", reroute=False)
+        return time.time() - t0
+
+    timed()                                  # compile + warm (both widths)
+    offs, ons = [], []
+    try:
+        for _ in range(5):
+            san.uninstall()
+            offs.append(timed())
+            san.install(replay_denom=denom, replay_rows=2)
+            san.reset()
+            ons.append(timed())
+        summ = san.summary()
+    finally:
+        san.uninstall()
+        san.reset()
+    dt_off, dt_on = min(offs), min(ons)
+    overhead = dt_on / dt_off - 1.0
+
+    out = dict(
+        n_rows=n_rows_total,
+        disarmed_rows_per_s=round(n_rows_total / dt_off, 2),
+        armed_rows_per_s=round(n_rows_total / dt_on, 2),
+        overhead_frac=round(overhead, 4),
+        replay_denom=denom,
+        n_dispatch_probes=summ["n_dispatch_probes"],
+        n_replayed_dispatches=summ["n_replayed_dispatches"],
+        n_replayed_rows=summ["n_replayed_rows"],
+        violations_total=summ["violations_total"])
+    _write_csv("sanitizer_overhead", [out])
+    with open(BENCH / "BENCH_check.json", "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    _row("sanitizer_overhead", dt_on * 1e6 / n_rows_total,
+         f"sanitizer overhead {overhead:+.1%} ({out['armed_rows_per_s']:,.0f}"
+         f" vs {out['disarmed_rows_per_s']:,.0f} rows/s; target <5%); "
+         f"replayed {summ['n_replayed_rows']} rows in "
+         f"{summ['n_replayed_dispatches']} dispatches; "
+         f"violations={summ['violations_total']}")
+
+
 def fault_recovery(reps: int):
     """Query latency under injected backend faults (DESIGN.md §10): p50/p99
     per-query service latency at 0% / 5% / 20% per-row backend failure rate
@@ -619,8 +710,9 @@ def fault_recovery(reps: int):
         tmp = tempfile.mkdtemp(prefix="bench_fault_")
         reg = obs.MetricsRegistry()
         svc = SimulationService(root=tmp, metrics=reg, resilience=cfg)
-        mk = lambda s: svc.make_query(topo, W_list=[W], lam_list=[3],
-                                      reps=1, seed0=s, backend="jax")
+        def mk(s):
+            return svc.make_query(topo, W_list=[W], lam_list=[3],
+                                  reps=1, seed0=s, backend="jax")
         with rz.fault_plan(rz.no_faults()):
             svc.query_many([mk(0)])          # compile warm-up, fault-free
         lats = []
@@ -717,6 +809,7 @@ def main():
         "paired_comparison": lambda: paired_comparison(reps),
         "backend_matrix": lambda: backend_matrix(reps),
         "obs_overhead": lambda: obs_overhead(reps),
+        "sanitizer_overhead": lambda: sanitizer_overhead(reps),
         "fault_recovery": lambda: fault_recovery(reps),
         "roofline": lambda: roofline(reps),
     }

@@ -1,0 +1,148 @@
+"""repro.check — the invariant checker suite (DESIGN.md §11).
+
+Three passes, one CLI (``python -m repro.check``), one committed baseline
+(``artifacts/check/baseline.json``):
+
+* ``jaxpr_lint``    — static jaxpr/compile hazard analysis: traces every
+  registered backend's dispatch program per task model and flags retrace
+  hazards, host-sync callbacks, float64 promotion, non-pow2 Pallas grid
+  shapes, and donation the platform will not honour.
+* ``protocol_lint`` — AST lint over ``src/repro/service/`` and
+  ``src/repro/core/``: lock discipline, heartbeat-before-dispatch,
+  tmp+``os.replace``-only store writes, NON_RECOVERABLE never retried,
+  and store-key purity (canonical JSON closed over a field whitelist).
+* ``sanitizer``     — opt-in runtime probes (``REPRO_WS_SANITIZE=1``):
+  per-lane clock monotonicity, work conservation at segment boundaries,
+  steal accounting, and bitwise oracle replay of sampled dispatches.
+
+Naming note: this package is ``repro.check``; the paper's *makespan-bound
+analysis* lives in :mod:`repro.core.analysis`. They are unrelated — the
+protocol lint's ``imports.shadow`` rule flags any bare ``import analysis``
+or ``import check`` that would blur the distinction.
+
+Findings are machine-readable (:class:`Finding`) and fingerprinted without
+line numbers, so the committed baseline survives unrelated edits: new
+findings fail CI, baselined ones only warn — the same trajectory-not-gate
+policy as ``benchmarks/check_regression.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+PASSES = ("jaxpr", "protocol", "sanitizer")
+
+#: Default committed baseline, relative to the repo root.
+BASELINE_REL = Path("artifacts") / "check" / "baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One checker finding.
+
+    ``where`` is ``path:line`` for static passes or a runtime site name for
+    the sanitizer; the line is stripped from the fingerprint so baselines
+    stay stable across unrelated edits. ``message`` must therefore be
+    written value-stable by each rule (no line numbers, no timings).
+    """
+
+    pass_name: str          # one of PASSES
+    rule: str               # e.g. "lock.unlock_path"
+    where: str              # "src/repro/service/broker.py:412" or a site
+    symbol: str             # enclosing function / model / backend name
+    message: str
+    severity: str = "error"
+
+    def fingerprint(self) -> str:
+        loc = self.where.rsplit(":", 1)[0] if self._has_line() else self.where
+        blob = "|".join((self.pass_name, self.rule, loc, self.symbol,
+                         self.message))
+        return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+
+    def _has_line(self) -> bool:
+        tail = self.where.rsplit(":", 1)
+        return len(tail) == 2 and tail[1].isdigit()
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(pass_name=d["pass_name"], rule=d["rule"], where=d["where"],
+                   symbol=d.get("symbol", ""), message=d["message"],
+                   severity=d.get("severity", "error"))
+
+
+def repo_root(start: Optional[Path] = None) -> Path:
+    """Walk up from ``start`` (default: this file) to the checkout root."""
+    here = (start or Path(__file__)).resolve()
+    for cand in (here, *here.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return here.parent
+
+
+def default_baseline_path() -> Path:
+    return repo_root() / BASELINE_REL
+
+
+def load_baseline(path: Path) -> Dict[str, dict]:
+    """fingerprint -> recorded finding dict; empty when the file is absent."""
+    if not path.exists():
+        return {}
+    doc = json.loads(path.read_text())
+    return {f["fingerprint"]: f for f in doc.get("findings", [])}
+
+
+def write_baseline(findings: Iterable[Finding], path: Path) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "version": 1,
+        "findings": sorted((f.to_dict() for f in findings),
+                           key=lambda d: (d["pass_name"], d["rule"],
+                                          d["where"], d["fingerprint"])),
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+
+def split_against_baseline(
+        findings: Iterable[Finding],
+        baseline: Dict[str, dict]) -> Tuple[List[Finding], List[Finding]]:
+    """Partition into (new, known) by fingerprint membership."""
+    new, known = [], []
+    for f in findings:
+        (known if f.fingerprint() in baseline else new).append(f)
+    return new, known
+
+
+def run_pass(name: str) -> List[Finding]:
+    """Run one pass by name (lazy imports keep this package import-light)."""
+    if name == "jaxpr":
+        from repro.check import jaxpr_lint
+        return jaxpr_lint.run()
+    if name == "protocol":
+        from repro.check import protocol_lint
+        return protocol_lint.run()
+    if name == "sanitizer":
+        from repro.check import sanitizer
+        return sanitizer.run()
+    raise ValueError(f"unknown check pass {name!r}; expected one of {PASSES}")
+
+
+def run_all(passes: Iterable[str] = PASSES) -> List[Finding]:
+    out: List[Finding] = []
+    for name in passes:
+        out.extend(run_pass(name))
+    return out
+
+
+__all__ = [
+    "PASSES", "Finding", "repo_root", "default_baseline_path",
+    "load_baseline", "write_baseline", "split_against_baseline",
+    "run_pass", "run_all",
+]

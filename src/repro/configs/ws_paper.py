@@ -11,7 +11,7 @@ sub-grid used by benchmarks (same code path, fewer reps).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,12 +8,25 @@
 * the fitted constant (paper finds ≈3.8):  Cmax ≈ W/p + c·λ·log2(W/λ)
 * acceptable-latency analysis (paper §4.2): max λ with Cmax/(W/p) ≤ 1.1;
   the paper derives the near-linear law  W/p ≈ 470·λ.
+
+Not to be confused with :mod:`repro.check` — the invariant checker suite
+(jaxpr hazards, protocol lint, determinism sanitizer). This module is the
+paper's makespan *math*; ``repro.check`` checks the *code*. Always import
+both by their full dotted path: a bare ``import analysis`` (or ``import
+check``) resolves to whichever shadow sits on ``sys.path`` first, and the
+protocol lint's ``imports.shadow`` rule flags it.
 """
 from __future__ import annotations
 
 from typing import Sequence
 
 import numpy as np
+
+__all__ = [
+    "GAMMA", "overhead_term", "makespan_bound", "overhead_ratio",
+    "fitted_constant", "predicted_makespan", "theoretical_limit_latency",
+    "experimental_limit_latency", "summarize",
+]
 
 GAMMA = 4.0  # paper: 4γ ≈ 16
 

@@ -69,6 +69,20 @@ def _fault_point(site: str, **ctx):
     return _fault_point_impl(site, **ctx)
 
 
+_sanitize_impl = None
+
+
+def _sanitize(site: str, **ctx):
+    """Lazy bridge to the opt-in determinism sanitizer
+    (``repro.check.sanitizer.probe``), same shape as :func:`_fault_point`:
+    a disabled probe costs one env read per dispatch."""
+    global _sanitize_impl
+    if _sanitize_impl is None:
+        from repro.check.sanitizer import probe
+        _sanitize_impl = probe
+    return _sanitize_impl(site, **ctx)
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendCapabilities:
     """What a backend can run, reported without executing anything."""
@@ -172,6 +186,11 @@ class ExecutionBackend:
             if self.last_stats is not None:
                 sp.set(n_segments=self.last_stats.n_segments,
                        wasted_frac=round(self.last_stats.wasted_frac, 4))
+            # Sanitizer: steal-accounting check + seeded oracle replay of a
+            # sampled dispatch (repro.check.sanitizer). No-op when disabled.
+            _sanitize("backend.result", backend=self, model=model,
+                      rows=rows, remote_prob=remote_prob,
+                      ev_budget=ev_budget, grid=out)
             return out
 
     def _run_rows(self, model, rows, remote_prob, ev_budget, devices):
@@ -248,7 +267,7 @@ class OracleBackend(ExecutionBackend):
                   lam_local=int(rows.lam_local[k]),
                   lam_remote=int(rows.lam_remote[k]),
                   mwt=model.mwt, remote_prob=rp, max_events=max_events)
-        i32 = lambda v: np.int32(v)
+        i32 = np.int32
         trace = np.zeros((1, 4), np.int32)     # log_trace=False engine shape
         if isinstance(model, dv.DivisibleModel):
             o = orc.simulate_oracle(

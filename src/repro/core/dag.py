@@ -28,9 +28,8 @@ from jax import lax
 
 from repro.core import engine as eng
 from repro.core.dag_gen import TaskDag
-from repro.core.engine import (ACTIVE, ANS_FLIGHT, EV_ANS_FAIL, EV_ANS_OK,
-                               EV_IDLE, EV_REQ_FAIL, EV_REQ_OK, INF32,
-                               REQ_FLIGHT, Scenario, make_scenario)
+from repro.core.engine import (EV_ANS_FAIL, EV_ANS_OK,
+                               EV_IDLE, EV_REQ_FAIL, EV_REQ_OK, Scenario)
 from repro.core.topology import Topology
 
 

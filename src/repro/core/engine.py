@@ -548,7 +548,9 @@ def _compact_impl(state, scn: Scenario, idx, n_real):
     """Gather lanes ``idx`` of (state, scn) into a dense batch; positions
     >= ``n_real`` are padding (copies of lane idx[k]) force-marked done so
     they never execute another event."""
-    take = lambda x: jnp.take(x, idx, axis=0)
+    def take(x):
+        return jnp.take(x, idx, axis=0)
+
     core, ms = jax.tree.map(take, state)
     scn = jax.tree.map(take, scn)
     pad = jnp.arange(idx.shape[0], dtype=jnp.int32) >= n_real
@@ -588,6 +590,21 @@ class SegmentStats:
             events_executed=self.events_executed + other.events_executed,
             max_width=max(self.max_width, other.max_width),
             final_width=max(self.final_width, other.final_width))
+
+
+_sanitize_impl = None
+
+
+def _sanitize(site: str, **ctx):
+    """Lazy bridge to the opt-in determinism sanitizer
+    (``repro.check.sanitizer.probe``), mirroring the ``_fault_point``
+    bridge in ``core/backend.py``: core never imports the checker suite at
+    module level, and a disabled probe costs one env read per segment."""
+    global _sanitize_impl
+    if _sanitize_impl is None:
+        from repro.check.sanitizer import probe
+        _sanitize_impl = probe
+    return _sanitize_impl(site, **ctx)
 
 
 class SegmentedRun:
@@ -650,6 +667,10 @@ class SegmentedRun:
         self.stats.n_segments += 1
         self.stats.lane_cycles += width * int(k_max)
         self.stats.events_executed += int(k_sum)
+        # Sanitizer tick: idx still maps every lane to its original row
+        # (harvest below rewrites it), state is post-segment — exactly the
+        # boundary the monotonicity/conservation invariants quantify over.
+        _sanitize("engine.segment", run=self, fin=fin)
         real = self.idx >= 0
         newly = fin & real
         if newly.any():

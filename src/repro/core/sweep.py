@@ -132,6 +132,14 @@ class GridRows(NamedTuple):
     def slice(self, lo: int, hi: int) -> "GridRows":
         return GridRows(*(a[lo:hi] for a in self))
 
+    def take(self, idx) -> "GridRows":
+        """Gather rows by any numpy fancy index (bool mask or positions),
+        preserving the given order — the one sanctioned way to permute or
+        subset a row set (broker straggler sort, adaptive re-replication,
+        sanitizer replay sampling)."""
+        idx = np.asarray(idx)
+        return GridRows(*(np.asarray(a)[idx] for a in self))
+
 
 def lam_pair(l) -> tuple:
     """Normalize a lam entry to an int (lam_local, lam_remote) pair."""

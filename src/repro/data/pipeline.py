@@ -15,7 +15,6 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeSpec
 

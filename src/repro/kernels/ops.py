@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import divisible as dv
 from repro.kernels import decode_attention as _fd

@@ -12,7 +12,6 @@ implementations that are themselves oracle-tested:
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import divisible as _dv
 from repro.models.attention import decode_attention as _dec

@@ -129,3 +129,31 @@ def ws_sim_pallas(model, scn: eng.Scenario, interpret: Optional[bool] = None,
 
     outs = [o.astype(jnp.bool_) if b else o for o, b in zip(outs, bool_mask)]
     return jax.tree.unflatten(res_def, outs)
+
+
+def grid_shape_hazards(grid_chunk: Optional[int],
+                       G: Optional[int] = None) -> list:
+    """Static shape hazards of a planned ``ws_sim_pallas`` dispatch.
+
+    Returns human-readable hazard strings (empty list = clean); consumed by
+    the jaxpr hazard analyzer (``repro.check.jaxpr_lint``, rule
+    ``pallas.grid_chunk``). Every distinct padded grid shape compiles a
+    distinct Mosaic program, so backends must chunk to a power of two: the
+    broker already pads batches to pow2, and a pow2 ``grid_chunk`` divides
+    every such batch into one repeated shape.
+    """
+    hazards = []
+    if grid_chunk is not None:
+        c = int(grid_chunk)
+        if c <= 0:
+            hazards.append(f"grid_chunk={c} must be a positive power of two")
+        elif c & (c - 1):
+            hazards.append(
+                f"grid_chunk={c} is not a power of two: pow2-padded broker "
+                f"batches will not divide evenly, so every distinct batch "
+                f"size compiles a fresh Mosaic program shape")
+    elif G is not None and G > 1 and (int(G) & (int(G) - 1)):
+        hazards.append(
+            f"unchunked grid G={int(G)} is not a power of two: each "
+            f"distinct G compiles a fresh Mosaic program")
+    return hazards

@@ -19,7 +19,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from repro.configs.base import SHAPES, cell_is_runnable, get_config, list_archs
 from repro.launch import hlo_analysis as ha

@@ -7,7 +7,7 @@ tests/benches must see the single real device.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -13,7 +13,7 @@ pad; we choose replication for predictable comms).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np

@@ -12,16 +12,13 @@ mesh on a fleet (same code path the dry-run lowers).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SHAPES, get_config, list_archs, ShapeSpec
+from repro.configs.base import get_config, list_archs, ShapeSpec
 from repro.data.pipeline import DataConfig, batch_at
-from repro.launch.mesh import make_test_mesh
 from repro.models import build_model
 from repro.optim import adamw
 from repro.optim import compression as comp

@@ -7,7 +7,7 @@ upcasts to f32 where it matters (norms, softmax, rotary).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

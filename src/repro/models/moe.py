@@ -13,7 +13,6 @@ load-balancing trade the WS literature studies, applied to expert dispatch.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -15,7 +15,7 @@ is adequate and decode is O(1).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

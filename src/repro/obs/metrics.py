@@ -177,6 +177,16 @@ class MetricsRegistry:
             items = sorted(self._series.items())
         return [inst for _, inst in items]
 
+    def find(self, kind: str, name: str) -> List[tuple]:
+        """Live ``(labels, instance)`` pairs of every series of ``kind``
+        named ``name``, across all label sets — e.g. every
+        ``check.violations{pass=...,rule=...}`` counter the sanitizer and
+        the static passes have incremented."""
+        with self._lock:
+            items = sorted(self._series.items())
+        return [(dict(key[2]), inst) for key, inst in items
+                if key[0] == kind and key[1] == name]
+
     def snapshot(self) -> dict:
         """Render every series into one JSON-able dict, keyed
         ``name`` or ``name{label=value,...}`` per kind."""

@@ -41,7 +41,7 @@ import threading
 import time
 from contextlib import contextmanager
 from pathlib import Path
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Union
 
 #: Set to a file path to enable tracing process-wide; the Chrome-trace JSON
 #: is written there at interpreter exit.

@@ -15,10 +15,8 @@ Production behaviours, exercised end-to-end by tests/examples on CPU:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_mod

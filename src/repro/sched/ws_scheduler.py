@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

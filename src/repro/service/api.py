@@ -18,6 +18,7 @@ import os
 from typing import Callable, List, Optional, Sequence, Union
 
 from repro import obs
+from repro.check import sanitizer as check_san
 from repro.core import engine as eng
 from repro.core.sweep import (GridResult, canonical_grid, lam_pair,
                               resolve_model, run_grid)
@@ -255,4 +256,5 @@ class SimulationService:
                     if self.compile_cache_dir else None,
                     engine_version=eng.ENGINE_VERSION,
                     degraded=rz.degraded_summary(m),
+                    sanitizer=check_san.summary(),
                     metrics=snapshot)

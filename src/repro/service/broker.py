@@ -55,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro import obs
+from repro.check import sanitizer as san
 from repro.core import backend as bk
 from repro.service import resilience as rz
 from repro.core import engine as eng
@@ -265,7 +266,7 @@ class _Pending:
         _, inv = _rows_cell_index(full)
         keep = pending[inv]
         self._active_cells = inv[keep]
-        return GridRows(*(np.asarray(a)[keep] for a in full))
+        return full.take(keep)
 
     def wants(self) -> List[tuple]:
         """(tag, model, canonical config, remote_prob, backend, rows) work
@@ -334,8 +335,7 @@ class _PairedPending:
                            seed0=b.seed0, stream=stream)
         if keep is None:
             return full_a, full_b
-        return (GridRows(*(np.asarray(x)[keep] for x in full_a)),
-                GridRows(*(np.asarray(x)[keep] for x in full_b)))
+        return full_a.take(keep), full_b.take(keep)
 
     def _next_keep(self) -> Optional[Tuple[int, Optional[np.ndarray]]]:
         """(reps, row keep mask) of the next round, or None when finished."""
@@ -840,7 +840,7 @@ class QueryBroker:
                 self.history.predict(sig, model.p, cols), kind="stable")
             if not np.array_equal(srt, np.arange(n)):
                 order = srt
-                rows = GridRows(*(np.asarray(a)[order] for a in rows))
+                rows = rows.take(order)
                 if budgets is not None:
                     budgets = budgets[order]
         padded = _pad_rows(rows, _next_pow2(n)) if self.pad_pow2 else rows
@@ -892,6 +892,11 @@ class QueryBroker:
         ev = grid.extras.get("n_events")
         if ev is not None and n > 0:
             self.history.observe(sig, cols, np.asarray(ev)[:n])
+            # Sanitizer: event counts sane vs the dispatch budget cap, and
+            # the post-observe EMA still predicts finite positive stragglers.
+            san.probe("broker.observe", sig=sig, cols=cols,
+                      ev=np.asarray(ev)[:n], cap=cap, history=self.history,
+                      p=model.p)
         off = 0
         for i, tag, rws, _ in bucket.members:
             part = _slice_grid(grid, off, off + len(rws))

@@ -522,6 +522,13 @@ NON_RECOVERABLE = (ValueError, TypeError, NotImplementedError, KeyError,
                    KeyboardInterrupt, SystemExit)
 
 
+def non_recoverable_names() -> tuple:
+    """Class names of :data:`NON_RECOVERABLE` — the single source the
+    concurrency lint (``repro.check.protocol_lint``) matches ``except``
+    clauses against, so the lint can never drift from the runtime tuple."""
+    return tuple(e.__name__ for e in NON_RECOVERABLE)
+
+
 @dataclasses.dataclass
 class ResilienceConfig:
     """Knobs for the broker's self-healing dispatch. ``enabled=False``

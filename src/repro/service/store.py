@@ -15,6 +15,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import tempfile
 import time
 from collections import OrderedDict
@@ -31,6 +32,36 @@ from repro.service import resilience as rz
 
 #: Default disk tier location: <repo>/artifacts/store.
 DEFAULT_ROOT = Path(__file__).resolve().parents[3] / "artifacts" / "store"
+
+# --- store-key purity (checked by repro.check.protocol_lint) ---------------
+# The key universe is closed: canonical_model may emit exactly these keys.
+# All backends are bit-identical (tests/test_backends.py), so nothing about
+# the execution substrate — backend, device count, host, time — may ever
+# reach a sha256 store key; a fill from any machine serves every other.
+# Growing a model config is legal, but it must be a *reviewed* whitelist
+# edit here, or `python -m repro.check` fails the keys.purity rule.
+
+#: Top-level canonical_model keys.
+CANONICAL_KEY_WHITELIST = frozenset({
+    "kind", "topology", "dag", "mwt", "max_events", "log_trace", "max_trace",
+    "owner_lifo", "deque_cap", "merge_alpha", "merge_beta_num",
+    "merge_beta_den", "pool_cap",
+})
+
+#: Keys of the nested canonical_topology dict.
+TOPOLOGY_KEY_WHITELIST = frozenset({
+    "cluster_id", "hops", "lam_local", "lam_remote", "strategy",
+    "remote_prob_u32", "name",
+})
+
+#: Keys of the nested dag digest dict.
+DAG_KEY_WHITELIST = frozenset({"dur", "child_ptr", "child_idx", "name"})
+
+#: A canonical key matching this pattern is *always* an error, whitelisted
+#: or not: it names execution-substrate or wall-clock state.
+FORBIDDEN_KEY_PATTERN = re.compile(
+    r"backend|device|host\b|hostname|platform|node|time|clock|pid|rank|"
+    r"uname|cwd|env", re.IGNORECASE)
 
 _GRID_FIELDS = ("W", "lam", "theta_static", "theta_comm", "seed", "makespan",
                 "n_requests", "n_success", "n_fail", "total_idle",
@@ -60,10 +91,22 @@ def canonical_topology(t: Topology) -> dict:
 
 
 def canonical_model(model) -> dict:
-    """Canonical JSON-able form of a TaskModel's full static config."""
+    """Canonical JSON-able form of a TaskModel's full static config.
+
+    Keys are pure simulation semantics: a field whose name matches
+    :data:`FORBIDDEN_KEY_PATTERN` (backend/device/host/time...) is refused
+    at runtime — leaking substrate state into keys would silently fork the
+    cache per backend/host. The closed whitelist
+    (:data:`CANONICAL_KEY_WHITELIST`) is enforced by the protocol lint.
+    """
     model = as_model(model)
     out: Dict[str, object] = {"kind": type(model).__name__}
     for f in dataclasses.fields(model.cfg):
+        if FORBIDDEN_KEY_PATTERN.search(f.name):
+            raise ValueError(
+                f"config field {f.name!r} matches the forbidden store-key "
+                f"pattern ({FORBIDDEN_KEY_PATTERN.pattern}): backend/host/"
+                f"device/time state must never reach sha256 store keys")
         v = getattr(model.cfg, f.name)
         if f.name == "topology":
             out[f.name] = canonical_topology(v)

@@ -1,0 +1,99 @@
+"""Store-key purity: canonical model serialization is a pure function of
+simulation semantics — byte-stable across backend selection, env knobs and
+host identity — and the key universe is closed (whitelist + forbidden
+pattern), so substrate state can never fork the content-addressed cache."""
+import dataclasses
+import json
+import socket
+
+import pytest
+
+from repro.check import protocol_lint
+from repro.core import dag_gen, sweep
+from repro.core.divisible import DivisibleModel
+from repro.core.engine import EngineConfig
+from repro.core.topology import one_cluster
+from repro.service import store
+
+TOPO = one_cluster(4, 1)
+
+
+def _models():
+    return [
+        ("divisible", sweep.make_model("divisible", topology=TOPO,
+                                       max_events=256)),
+        ("dag", sweep.make_model("dag", topology=TOPO,
+                                 dag=dag_gen.binary_tree(3), max_events=256)),
+        ("adaptive", sweep.make_model("adaptive", topology=TOPO,
+                                      max_events=256)),
+    ]
+
+
+def _blob(model) -> bytes:
+    return json.dumps(store.canonical_model(model), sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+@pytest.mark.parametrize("name,model", _models())
+def test_canonical_bytes_stable_across_substrate(name, model, monkeypatch):
+    before = _blob(model)
+    monkeypatch.setenv("REPRO_WS_BACKEND", "oracle")
+    monkeypatch.setenv("REPRO_WS_SEG_LEN", "17")
+    monkeypatch.setenv("REPRO_WS_SANITIZE", "1")
+    monkeypatch.setattr(socket, "gethostname", lambda: "poisoned-host")
+    assert _blob(model) == before
+    # ...and so is the derived content address.
+    grid = sweep.canonical_grid([64], [1], 2)
+    monkeypatch.delenv("REPRO_WS_BACKEND")
+    assert store.query_key(model, grid) == store.query_key(model, grid)
+
+
+@pytest.mark.parametrize("name,model", _models())
+def test_canonical_keys_within_whitelist(name, model):
+    canon = store.canonical_model(model)
+    assert protocol_lint.check_canonical(canon, symbol=name) == []
+    assert set(canon) <= store.CANONICAL_KEY_WHITELIST
+    assert set(canon["topology"]) <= store.TOPOLOGY_KEY_WHITELIST
+    if canon.get("dag"):
+        assert set(canon["dag"]) <= store.DAG_KEY_WHITELIST
+
+
+def test_digest_coalesces_structurally_identical_models():
+    a = sweep.make_model("divisible", topology=one_cluster(4, 1),
+                         max_events=256)
+    b = sweep.make_model("divisible", topology=one_cluster(4, 1),
+                         max_events=256)
+    assert a is not b
+    assert store.model_digest(a) == store.model_digest(b)
+    c = sweep.make_model("divisible", topology=one_cluster(8, 1),
+                         max_events=256)
+    assert store.model_digest(a) != store.model_digest(c)
+
+
+def test_poisoned_field_refused_at_runtime():
+    @dataclasses.dataclass(frozen=True)
+    class PoisonedCfg(EngineConfig):
+        backend_name: str = "jax"
+
+    with pytest.raises(ValueError, match="forbidden store-key pattern"):
+        store.canonical_model(DivisibleModel(PoisonedCfg(topology=TOPO)))
+
+
+def test_float_field_refused_at_runtime():
+    @dataclasses.dataclass(frozen=True)
+    class FloatCfg(EngineConfig):
+        alpha: float = 0.5
+
+    with pytest.raises(TypeError, match="fixed-point"):
+        store.canonical_model(DivisibleModel(FloatCfg(topology=TOPO)))
+
+
+def test_unreviewed_field_fails_whitelist_lint():
+    @dataclasses.dataclass(frozen=True)
+    class ExtraCfg(EngineConfig):
+        extra_knob: int = 3
+
+    canon = store.canonical_model(DivisibleModel(ExtraCfg(topology=TOPO)))
+    got = protocol_lint.check_canonical(canon, symbol="extra")
+    assert [f.rule for f in got] == ["keys.purity"]
+    assert "extra_knob" in got[0].message and "whitelist" in got[0].message
