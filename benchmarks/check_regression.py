@@ -6,9 +6,11 @@ Usage::
     python benchmarks/check_regression.py BASELINE.json NEW.json \
         [--threshold 0.2] [--strict] \
         [--obs-baseline BENCH_obs.json --obs-new BENCH_obs.json] \
-        [--fault-baseline BENCH_fault.json --fault-new BENCH_fault.json]
+        [--fault-baseline BENCH_fault.json --fault-new BENCH_fault.json] \
+        [--daemon-baseline BENCH_daemon.json --daemon-new BENCH_daemon.json]
 
-Backends present and available in both files are compared on ``rows_per_s``;
+Backends present, available and ``comparable`` in both files are compared
+on ``rows_per_s``;
 a drop of more than ``--threshold`` (default 20%) prints a warning (as a
 GitHub Actions ``::warning::`` annotation when running in CI). The same
 warn-only policy covers two quality signals: the wasted-lane fraction of
@@ -31,11 +33,14 @@ from pathlib import Path
 
 def compare(baseline: dict, new: dict, threshold: float) -> list:
     """Return [(backend, old_rows_per_s, new_rows_per_s, ratio), ...] for
-    every backend regressing by more than ``threshold``."""
+    every backend regressing by more than ``threshold``. Backends marked
+    ``comparable: false`` (pallas_interpret's reduced row slice) are
+    skipped on either side: their rows/s is measured on a different
+    workload than the full grid and is not a like-for-like perf series."""
     old_by = {b["backend"]: b for b in baseline.get("backends", [])
-              if b.get("available")}
+              if b.get("available") and b.get("comparable", True)}
     new_by = {b["backend"]: b for b in new.get("backends", [])
-              if b.get("available")}
+              if b.get("available") and b.get("comparable", True)}
     regressions = []
     for name in sorted(set(old_by) & set(new_by)):
         old_rps = float(old_by[name].get("rows_per_s") or 0.0)
@@ -53,9 +58,11 @@ def compare_wasted(baseline: dict, new: dict, threshold: float) -> list:
     every backend whose useful lane fraction ``1 - wasted_frac_actual``
     shrank by more than ``threshold``."""
     old_by = {b["backend"]: b for b in baseline.get("backends", [])
-              if b.get("available") and "wasted_frac_actual" in b}
+              if b.get("available") and b.get("comparable", True)
+              and "wasted_frac_actual" in b}
     new_by = {b["backend"]: b for b in new.get("backends", [])
-              if b.get("available") and "wasted_frac_actual" in b}
+              if b.get("available") and b.get("comparable", True)
+              and "wasted_frac_actual" in b}
     regressions = []
     for name in sorted(set(old_by) & set(new_by)):
         old_useful = 1.0 - float(old_by[name]["wasted_frac_actual"])
@@ -102,6 +109,37 @@ def compare_cache_hits(baseline: dict, new: dict, threshold: float):
     return None
 
 
+def compare_daemon(baseline: dict, new: dict, threshold: float) -> list:
+    """Return warning strings for the ``daemon_throughput`` bench
+    (BENCH_daemon.json): warm-daemon q/s dropping or per-query p99
+    latency growing by more than ``threshold``, or the daemon-vs-library
+    speedup falling below the 5x acceptance floor (DESIGN.md §12)."""
+    warnings = []
+    old_d = baseline.get("daemon", {})
+    new_d = new.get("daemon", {})
+    old_qps = float(old_d.get("qps") or 0.0)
+    new_qps = float(new_d.get("qps") or 0.0)
+    if old_qps > 0.0 and new_qps / old_qps < 1.0 - threshold:
+        warnings.append(
+            f"daemon q/s regressed {old_qps:,.2f} -> {new_qps:,.2f} "
+            f"({new_qps / old_qps:.0%} of baseline, "
+            f"threshold {1 - threshold:.0%})")
+    old_p99 = float(old_d.get("p99_ms") or 0.0)
+    new_p99 = float(new_d.get("p99_ms") or 0.0)
+    if old_p99 > 0.0 and new_p99 / old_p99 > 1.0 + threshold:
+        warnings.append(
+            f"daemon per-query p99 latency regressed "
+            f"{old_p99:.1f}ms -> {new_p99:.1f}ms "
+            f"({new_p99 / old_p99:.0%} of baseline, "
+            f"threshold {1 + threshold:.0%})")
+    speedup = new.get("speedup_vs_library")
+    if speedup is not None and float(speedup) < 5.0:
+        warnings.append(
+            f"warm daemon is only x{float(speedup):.1f} faster than cold "
+            f"per-process library mode (acceptance floor: x5)")
+    return warnings
+
+
 def compare_sanitizer(baseline: dict, new: dict) -> list:
     """Return warning strings for the ``sanitizer_overhead`` bench
     (BENCH_check.json): armed overhead above the 5% budget, or any
@@ -139,6 +177,12 @@ def main(argv=None) -> int:
                          "latency guard)")
     ap.add_argument("--fault-new", type=Path, default=None,
                     help="fresh BENCH_fault.json (recovered-path p99 "
+                         "latency guard)")
+    ap.add_argument("--daemon-baseline", type=Path, default=None,
+                    help="baseline BENCH_daemon.json (daemon throughput/"
+                         "latency guard)")
+    ap.add_argument("--daemon-new", type=Path, default=None,
+                    help="fresh BENCH_daemon.json (daemon throughput/"
                          "latency guard)")
     ap.add_argument("--check-baseline", type=Path, default=None,
                     help="baseline BENCH_check.json (sanitizer overhead "
@@ -217,6 +261,22 @@ def main(argv=None) -> int:
             print("check_regression: fault bench file missing; "
                   "skipping recovered-path latency guard")
 
+    daemon_warns = []
+    if args.daemon_baseline and args.daemon_new:
+        if args.daemon_baseline.exists() and args.daemon_new.exists():
+            daemon_warns = compare_daemon(
+                json.loads(args.daemon_baseline.read_text()),
+                json.loads(args.daemon_new.read_text()), args.threshold)
+            for w in daemon_warns:
+                print(f"{warn}{w}")
+            if not daemon_warns:
+                print(f"check_regression: no daemon throughput/latency "
+                      f"regression > {args.threshold:.0%}, speedup above "
+                      f"the 5x floor")
+        else:
+            print("check_regression: daemon bench file missing; "
+                  "skipping daemon throughput guard")
+
     san_warns = []
     if args.check_baseline and args.check_new:
         if args.check_baseline.exists() and args.check_new.exists():
@@ -233,7 +293,7 @@ def main(argv=None) -> int:
                   "skipping sanitizer overhead guard")
 
     any_regression = bool(regressions or wasted or cache_reg or fault_regs
-                          or san_warns)
+                          or daemon_warns or san_warns)
     return 1 if (any_regression and args.strict) else 0
 
 

@@ -26,6 +26,9 @@ artifacts/bench/). Figures:
   fault_recovery         p50/p99 query latency at 0/5/20% injected backend
                          failure rate (retry + bisection salvage + fallback
                          chain), emitted as artifacts/bench/BENCH_fault.json
+  daemon_throughput      N client processes × M queries: warm shared daemon
+                         vs cold per-process library mode (q/s, dispatches,
+                         p50/p99), emitted as artifacts/bench/BENCH_daemon.json
   roofline               per-(arch×shape) terms from the dry-run artifacts
 
 Reduced repetition counts (CI-friendly); pass --full for paper-scale reps.
@@ -427,7 +430,10 @@ def backend_matrix(reps: int):
     high; the jax backend's ``wasted_frac_actual`` shows how much of that
     the segmented driver's compaction recovers. ``pallas_interpret`` is
     ~1000× slower than compiled paths, so it runs (and parity-checks) a
-    small row slice only."""
+    small row slice only — its record carries ``comparable: false``
+    because an 8-row rows/s is not the same workload as the 66-row grid,
+    and check_regression.py must not treat it as a like-for-like perf
+    series."""
     from repro.core import engine as eng
     from repro.core.backend import (backend_names, default_backend_name,
                                     get_backend)
@@ -469,6 +475,7 @@ def backend_matrix(reps: int):
         rec = dict(
             backend=name, available=True, kind=caps.kind,
             devices="+".join(caps.devices), n_rows=nb,
+            comparable=nb == len(rows),
             n_devices=caps.n_devices,
             rows_per_s=round(nb / dt, 2),
             events_per_s=round(float(g.extras["n_events"].sum()) / dt, 1),
@@ -746,6 +753,135 @@ def fault_recovery(reps: int):
          f"0 client errors)")
 
 
+#: Child process of the ``daemon_throughput`` bench: answers the same
+#: queries either through a DaemonClient (shared daemon) or through its
+#: own private SimulationService (per-process library mode, paying import
+#: + JIT warmup itself — the cost the daemon amortizes).
+_DAEMON_BENCH_CLIENT = """
+import json, sys, time
+cfg = json.loads(sys.argv[1])
+sys.path.insert(0, cfg["src"])
+from repro.core import one_cluster
+topo = one_cluster(cfg["p"], 1)
+kw = dict(W_list=[cfg["W"]], lam_list=cfg["lams"], reps=cfg["reps"])
+if cfg["mode"] == "daemon":
+    from repro.service import DaemonClient
+    svc = DaemonClient(root=cfg["root"], fallback=False)
+else:
+    from repro.service import SimulationService
+    svc = SimulationService(root=cfg["root"])
+lats = []
+for i in range(cfg["n_queries"]):
+    t0 = time.time()
+    svc.query(topo, seed0=cfg["seed0"] + i, **kw)
+    lats.append((time.time() - t0) * 1e3)
+print(json.dumps({"lats": lats,
+                  "dispatches": getattr(svc, "n_dispatches", 0)}))
+"""
+
+
+def daemon_throughput(reps: int):
+    """The daemon's reason to exist, measured (DESIGN.md §12): N client
+    processes × M queries against one warm shared daemon vs the same
+    clients each running per-process library mode from cold.
+
+    The daemon pays interpreter start + JIT compile once and shares the
+    broker across clients (identical concurrent questions coalesce into
+    one dispatch; answered ones are store hits). Library mode is the
+    pre-daemon workflow: one process invocation per query — a planner CLI
+    call — each paying interpreter start + jax import + JIT compile for a
+    query that computes in milliseconds, and dispatching N×M times in
+    total. Emits BENCH_daemon.json (q/s, dispatches, per-query p50/p99
+    per mode) for the warn-only check_regression.py guard; the ≥5x
+    warm-daemon speedup is this PR's acceptance floor."""
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+    from repro.core import one_cluster
+    from repro.service import DaemonClient, SimulationDaemon
+
+    n_clients, n_queries = 3, 4
+    p, W, lams, reps_q = 8, 20_000, [3, 5], max(min(reps, 8), 2)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    topo = one_cluster(p, 1)
+    tmps = []
+
+    def run_round(mode, roots, per_proc, seed0):
+        cfgs = [dict(mode=mode, src=src, root=str(r), p=p, W=W, lams=lams,
+                     reps=reps_q, n_queries=per_proc, seed0=seed0)
+                for r in roots]
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", _DAEMON_BENCH_CLIENT, json.dumps(c)],
+            stdout=subprocess.PIPE, text=True) for c in cfgs]
+        outs = [json.loads(pr.communicate()[0].strip().splitlines()[-1])
+                for pr in procs]
+        assert all(pr.returncode == 0 for pr in procs)
+        lats = [l for o in outs for l in o["lats"]]
+        return lats, sum(o["dispatches"] for o in outs)
+
+    # Warm shared daemon: JIT warmed by a *disjoint* query (seed0=999), so
+    # the measured queries still exercise real dispatches, coalescing and
+    # store hits — not a pure pre-filled-cache replay. The N clients are
+    # long-lived processes issuing all M queries over one connection.
+    tmp = Path(tempfile.mkdtemp(prefix="bench_daemon_"))
+    tmps.append(tmp)
+    d = SimulationDaemon(root=tmp / "store", coalesce_window_s=0.02).start()
+    warm = DaemonClient(root=d.store.root, fallback=False)
+    warm.query(topo, W_list=[W], lam_list=lams, reps=reps_q, seed0=999)
+    d0 = d.service.broker.n_dispatches
+    t0 = time.time()
+    lats_d, _ = run_round(
+        "daemon", [d.store.root] * n_clients, n_queries, seed0=100)
+    wall_d = time.time() - t0
+    disp_d = d.service.broker.n_dispatches - d0
+    d.stop()
+
+    # Cold per-process library mode: the same N×M queries, but each in a
+    # fresh process with a private store root (the pre-daemon CLI
+    # workflow) — N parallel invocations per round, M sequential rounds.
+    t0 = time.time()
+    lats_l, disp_l = [], 0
+    for i in range(n_queries):
+        roots = [Path(tempfile.mkdtemp(prefix="bench_daemon_lib_"))
+                 for _ in range(n_clients)]
+        tmps.extend(roots)
+        lats, disp = run_round("library", roots, 1, seed0=100 + i)
+        lats_l.extend(lats)
+        disp_l += disp
+    wall_l = time.time() - t0
+
+    total = n_clients * n_queries
+    qps_d, qps_l = total / wall_d, total / wall_l
+    speedup = qps_d / max(qps_l, 1e-9)
+    stats = {
+        "daemon": dict(qps=round(qps_d, 2), wall_s=round(wall_d, 3),
+                       n_dispatches=int(disp_d),
+                       p50_ms=round(float(np.percentile(lats_d, 50)), 2),
+                       p99_ms=round(float(np.percentile(lats_d, 99)), 2)),
+        "library": dict(qps=round(qps_l, 2), wall_s=round(wall_l, 3),
+                        n_dispatches=int(disp_l),
+                        p50_ms=round(float(np.percentile(lats_l, 50)), 2),
+                        p99_ms=round(float(np.percentile(lats_l, 99)), 2)),
+    }
+    out = dict(workload=dict(n_clients=n_clients, n_queries=n_queries,
+                             p=p, W=W, lams=list(lams), reps=reps_q),
+               speedup_vs_library=round(speedup, 2), **stats)
+    _write_csv("daemon_throughput", [dict(
+        mode=m, **stats[m]) for m in ("daemon", "library")])
+    BENCH.mkdir(parents=True, exist_ok=True)
+    with open(BENCH / "BENCH_daemon.json", "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    for t in tmps:
+        shutil.rmtree(t, ignore_errors=True)
+    _row("daemon_throughput", wall_d * 1e6 / total,
+         f"warm daemon x{speedup:.1f} vs cold per-process library "
+         f"({qps_d:.2f} vs {qps_l:.2f} q/s, {n_clients} clients x "
+         f"{n_queries} queries); dispatches {disp_d} vs {disp_l}; "
+         f"daemon p50/p99 {stats['daemon']['p50_ms']:.0f}/"
+         f"{stats['daemon']['p99_ms']:.0f}ms (target >=5x)")
+
+
 def roofline(_reps: int):
     """Aggregate the dry-run artifacts into the §Roofline table."""
     cells = sorted((ART / "dryrun").glob("*.json"))
@@ -811,6 +947,7 @@ def main():
         "obs_overhead": lambda: obs_overhead(reps),
         "sanitizer_overhead": lambda: sanitizer_overhead(reps),
         "fault_recovery": lambda: fault_recovery(reps),
+        "daemon_throughput": lambda: daemon_throughput(reps),
         "roofline": lambda: roofline(reps),
     }
     for name, fn in benches.items():

@@ -34,6 +34,17 @@ Rules (each emits ``Finding(pass_name="protocol", rule=...)``):
     :func:`repro.service.resilience.non_recoverable_names` so the lint can
     never drift from the runtime tuple.
 
+``socket.close_path``
+    Inside ``src/repro/service/``, a local bound from ``.accept()`` or a
+    socket constructor (``socket.socket`` / ``create_connection``) must be
+    structurally released: ``.close()`` in a ``finally``, ``.close()`` in
+    an ``except`` handler that re-raises (the ownership-transfer idiom —
+    close on failure, hand the live socket off on success), or use as a
+    ``with`` context. Attribute-held sockets (``self._sock = ...``) are
+    exempt — their owner's shutdown path closes them. A leaked accepted
+    connection keeps a client blocked in ``recv`` until its RPC timeout,
+    so the daemon tree enforces this shape rather than trusting review.
+
 ``imports.shadow``
     Bare ``import analysis`` / ``import check`` (or relative-less
     ``from analysis import ...``) anywhere under ``src/repro/``: the
@@ -64,6 +75,7 @@ ATOMIC_WRITE_ALLOWLIST = frozenset({
     "_write_atomic",      # the tmp + os.replace primitive itself
     "try_lock",           # O_EXCL lock files: atomicity comes from O_EXCL
     "_corrupt_in_place",  # deliberate fault injection (tests/chaos only)
+    "encode_grid",        # wire.py: savez into an in-memory BytesIO, no file
 })
 
 #: Call names that count as "dispatching work" for the heartbeat rule.
@@ -71,6 +83,11 @@ DISPATCH_CALLS = frozenset({"_dispatch_bucket", "dispatch_resilient"})
 
 #: Names whose presence in a function marks it as holding advisory locks.
 LOCK_HANDLE_HINTS = frozenset({"owned", "heartbeat", "try_lock"})
+
+#: Dotted call names that create a socket the caller owns.
+SOCKET_CREATORS = frozenset({
+    "socket.socket", "socket.create_connection", "socket.socketpair",
+})
 
 
 def _non_recoverable_names() -> frozenset:
@@ -287,6 +304,74 @@ def _check_retry_nonrecoverable(tree: ast.AST, path: str) -> List[Finding]:
     return out
 
 
+def _socket_released(fn: ast.AST, name: str) -> bool:
+    """True when ``name`` (a socket local) is structurally released inside
+    ``fn``: closed in a finally, closed in an except handler that
+    re-raises (close-on-failure + hand-off-on-success), or used as a
+    ``with`` context (directly or via ``contextlib.closing``)."""
+    def is_close(n: ast.AST) -> bool:
+        return (isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "close"
+                and isinstance(n.func.value, ast.Name)
+                and n.func.value.id == name)
+
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Try):
+            if any(is_close(m) for stmt in n.finalbody
+                   for m in ast.walk(stmt)):
+                return True
+        elif isinstance(n, ast.ExceptHandler):
+            if any(is_close(m) for m in ast.walk(n)) \
+                    and any(isinstance(m, ast.Raise) for m in ast.walk(n)):
+                return True
+        elif isinstance(n, ast.With):
+            for item in n.items:
+                ce = item.context_expr
+                if isinstance(ce, ast.Name) and ce.id == name:
+                    return True
+                if isinstance(ce, ast.Call) and any(
+                        isinstance(a, ast.Name) and a.id == name
+                        for a in ce.args):
+                    return True
+    return False
+
+
+def _check_socket_cleanup(tree: ast.AST, path: str) -> List[Finding]:
+    if "/service/" not in path.replace("\\", "/"):
+        return []
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign) \
+                    or _enclosing_function(node) is not fn \
+                    or not isinstance(node.value, ast.Call):
+                continue
+            call = node.value
+            is_accept = isinstance(call.func, ast.Attribute) \
+                and call.func.attr == "accept"
+            dotted = _dotted(call.func)
+            if not is_accept and dotted not in SOCKET_CREATORS:
+                continue
+            tgt = node.targets[0]
+            if is_accept and isinstance(tgt, ast.Tuple) and tgt.elts:
+                tgt = tgt.elts[0]        # conn, addr = sock.accept()
+            if not isinstance(tgt, ast.Name):
+                continue  # attribute-held: owner's shutdown path closes it
+            src = ".accept()" if is_accept else dotted + "(...)"
+            if not _socket_released(fn, tgt.id):
+                out.append(_finding(
+                    "socket.close_path", path, node, fn.name,
+                    f"{fn.name}: socket {tgt.id!r} from {src} has no "
+                    f"structural release (close in finally, close in a "
+                    f"re-raising except handler, or with-statement); a "
+                    f"leaked connection keeps its peer blocked in recv "
+                    f"until the RPC timeout"))
+    return out
+
+
 def _check_import_shadow(tree: ast.AST, path: str) -> List[Finding]:
     out = []
     shadow = {"analysis", "check"}
@@ -311,7 +396,8 @@ def _check_import_shadow(tree: ast.AST, path: str) -> List[Finding]:
 
 
 _RULES = (_check_lock_release, _check_heartbeat, _check_atomic_write,
-          _check_retry_nonrecoverable, _check_import_shadow)
+          _check_retry_nonrecoverable, _check_socket_cleanup,
+          _check_import_shadow)
 
 
 # ---------------------------------------------------------------------------
@@ -406,5 +492,6 @@ def run(root: Optional[Path] = None) -> List[Finding]:
     return findings
 
 
-__all__ = ["PASS", "ATOMIC_WRITE_ALLOWLIST", "lint_source", "lint_paths",
+__all__ = ["PASS", "ATOMIC_WRITE_ALLOWLIST", "SOCKET_CREATORS",
+           "lint_source", "lint_paths",
            "check_canonical", "purity_findings", "run"]

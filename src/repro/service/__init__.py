@@ -14,6 +14,12 @@ replication driven by a precision target instead of a fixed rep count
 (``estimator``). ``api.SimulationService`` is the facade callers use.
 """
 from repro.service.api import SimulationService  # noqa: F401
+from repro.service.client import (  # noqa: F401
+    DaemonClient, DaemonUnavailable, WireQuery,
+)
+from repro.service.daemon import (  # noqa: F401
+    PROTOCOL_VERSION, SimulationDaemon, default_socket_path,
+)
 from repro.service.resilience import (  # noqa: F401
     At, CircuitBreaker, FaultPlan, FaultSpec, InjectedFault, Prob,
     ResilienceConfig, RetryPolicy, fallback_chain, fault_plan, fault_point,

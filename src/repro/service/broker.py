@@ -486,6 +486,43 @@ class EventHistory:
                         axis=1).astype(np.int64)
         self.observe(sig, cols, ev)
 
+    def to_json(self) -> dict:
+        """JSON-able snapshot of the EMA state. Keys are ``(sig, *cols)``
+        tuples; the wire form stores them as ``[sig, c0, c1, ...]`` lists —
+        lossless because sig is a str and every col is an int."""
+        return {
+            "version": 1,
+            "alpha": self.alpha,
+            "ema": [[k[0], *[int(v) for v in k[1:]], float(ev)]
+                    for k, ev in sorted(self._ema.items())],
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "EventHistory":
+        """Rebuild from :meth:`to_json` output. Unknown versions / malformed
+        rows are skipped, never raised: a corrupt sidecar costs warm
+        predictions, not daemon startup."""
+        out = cls(alpha=float(doc.get("alpha", 0.5)))
+        if int(doc.get("version", 0)) != 1:
+            return out
+        for row in doc.get("ema", []):
+            try:
+                sig, *cols, ev = row
+                out._ema[(str(sig),) + tuple(int(c) for c in cols)] = \
+                    float(ev)
+            except (TypeError, ValueError):
+                continue
+        return out
+
+    def merge(self, other: "EventHistory") -> None:
+        """Fold another history in (EMA-blend on shared cells, adopt new
+        ones) — used when a daemon loads a sidecar on top of observations
+        already made this process."""
+        for key, ev in other._ema.items():
+            old = self._ema.get(key)
+            self._ema[key] = ev if old is None else \
+                (1.0 - self.alpha) * old + self.alpha * ev
+
     def predict(self, sig: str, p: int, cols: np.ndarray) -> np.ndarray:
         cols = np.asarray(cols)
         W = np.maximum(cols[:, 0], 1).astype(np.float64)

@@ -202,12 +202,18 @@ class ResultStore:
                  lru_capacity: int = 128,
                  gc_bytes: Optional[int] = None,
                  lock_stale_s: float = 300.0,
+                 touch_throttle_s: float = 60.0,
                  metrics: Optional[obs.MetricsRegistry] = None,
                  retry: Optional[rz.RetryPolicy] = None):
         self.root = Path(root) if root is not None else DEFAULT_ROOT
         self.lru_capacity = int(lru_capacity)
         self.gc_bytes = None if gc_bytes is None else int(gc_bytes)
         self.lock_stale_s = float(lock_stale_s)
+        # Memory-tier hits refresh the disk artifact's mtime (GC freshness)
+        # at most once per key per this many seconds: a hot-loop key costs
+        # one dict lookup per hit, not one utime syscall (0 = every hit).
+        self.touch_throttle_s = float(touch_throttle_s)
+        self._last_touch: Dict[str, float] = {}
         # Transient-I/O retry (full-jitter backoff) wrapped around disk reads
         # and the atomic artifact write; a fault that outlives the budget
         # degrades to the pre-existing behaviour (miss / raise).
@@ -246,8 +252,10 @@ class ResultStore:
                 sp.set(tier="mem")
                 # Refresh the disk artifact's mtime on memory hits too: a key
                 # this process serves from its LRU is hot, and must not look
-                # cold to another process's oldest-mtime GC of the shared tier.
-                self._touch(self._path(key))
+                # cold to another process's oldest-mtime GC of the shared
+                # tier. Throttled (touch_throttle_s): GC staleness is
+                # measured in minutes, so hot-loop hits stay syscall-free.
+                self._touch_throttled(key)
                 return g
             path = self._path(key)
             if path.exists():
@@ -265,7 +273,7 @@ class ResultStore:
                     self._remember(key, g)
                     self._count("hits_disk")
                     sp.set(tier="disk")
-                    self._touch(path)
+                    self._touch_throttled(key)
                     return g
             self._count("misses")
             sp.set(tier="miss")
@@ -287,6 +295,18 @@ class ResultStore:
             os.utime(path)
         except OSError:
             pass
+
+    def _touch_throttled(self, key: str):
+        """Per-key rate-limited :meth:`_touch`: the first hit always
+        refreshes; repeats within ``touch_throttle_s`` are dropped (the
+        mtime is at most that much stale, far inside any sane GC horizon)."""
+        now = time.monotonic()
+        last = self._last_touch.get(key)
+        if last is not None and now - last < self.touch_throttle_s:
+            self.metrics.counter("store.touches_throttled").inc()
+            return
+        self._last_touch[key] = now
+        self._touch(self._path(key))
 
     def _write_atomic(self, path: Path, writer):
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
@@ -349,7 +369,10 @@ class ResultStore:
         self._lru[key] = grid
         self._lru.move_to_end(key)
         while len(self._lru) > self.lru_capacity:
-            self._lru.popitem(last=False)
+            old, _ = self._lru.popitem(last=False)
+            # The throttle map tracks only LRU-resident keys, so a
+            # long-lived daemon's map is bounded by lru_capacity.
+            self._last_touch.pop(old, None)
 
     def contains(self, key: str) -> bool:
         return key in self._lru or self._path(key).exists()

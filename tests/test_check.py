@@ -143,6 +143,50 @@ def test_retry_nonrecoverable_negative_positive():
     assert protocol_lint.lint_source(good, "src/repro/service/fake.py") == []
 
 
+def test_socket_cleanup_negative():
+    bad = (
+        "def serve(self):\n"
+        "    conn, _ = self._sock.accept()\n"
+        "    handle(conn)\n")  # no finally/except-raise/with release
+    assert "socket.close_path" in _rules(
+        protocol_lint.lint_source(bad, "src/repro/service/fake.py"))
+    bad2 = (
+        "def dial(path):\n"
+        "    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)\n"
+        "    s.connect(path)\n"
+        "    s.close()\n")  # close exists but not on the exception path
+    assert "socket.close_path" in _rules(
+        protocol_lint.lint_source(bad2, "src/repro/service/fake.py"))
+    # outside src/repro/service/ the rule does not apply
+    assert protocol_lint.lint_source(bad, "src/repro/core/fake.py") == []
+
+
+def test_socket_cleanup_positive():
+    good = (
+        "def serve(self):\n"
+        "    conn, _ = self._sock.accept()\n"
+        "    try:\n"
+        "        handle(conn)\n"
+        "    finally:\n"
+        "        conn.close()\n"
+        "def dial(path):\n"                    # ownership-transfer idiom
+        "    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)\n"
+        "    try:\n"
+        "        s.connect(path)\n"
+        "    except BaseException:\n"
+        "        s.close()\n"
+        "        raise\n"
+        "    return s\n"
+        "def bind(self):\n"                    # attribute-held: exempt
+        "    self._sock = socket.socket(socket.AF_UNIX)\n"
+        "def probe(path):\n"                   # with-statement release
+        "    s = socket.create_connection(path)\n"
+        "    with contextlib.closing(s):\n"
+        "        s.sendall(b'ping')\n")
+    assert protocol_lint.lint_source(
+        good, "src/repro/service/fake.py") == []
+
+
 def test_import_shadow_negative():
     assert "imports.shadow" in _rules(
         protocol_lint.lint_source("import analysis\n",
